@@ -1,0 +1,52 @@
+"""Kernel micro-benchmarks (CPU interpret mode measures dispatch/semantics;
+the derived column reports the structural compute saving, which is what
+transfers to TPU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.block_sparse_matmul import (block_sparse_matmul,
+                                               compact_block_index)
+from repro.kernels.quant_matmul import quant_matmul
+from repro.sparsity.masks import block_map, block_mask
+
+try:
+    from benchmarks.common import emit, save_json, timeit
+except ImportError:
+    from common import emit, save_json, timeit
+
+
+def main():
+    results = {}
+    key = jax.random.PRNGKey(0)
+    m, k, n = 256, 512, 512
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+
+    # quant matmul: int8 weight bytes vs fp32
+    us = timeit(lambda: quant_matmul(x, w, interpret=True), iters=3)
+    emit("kernel_quant_matmul", us, "weight_bytes_reduction=4x")
+    results["quant_matmul_us"] = us
+
+    # block-sparse: trip count scales with live blocks
+    for rate in (0.0, 0.5, 0.75):
+        mask = block_mask(w, rate=rate, block=128)
+        kidx = jnp.asarray(compact_block_index(
+            block_map(np.asarray(mask), 128)))
+        wm = w * mask
+        us = timeit(lambda: block_sparse_matmul(x, wm, kidx,
+                                                interpret=True), iters=3)
+        trips = int(kidx.shape[1])
+        emit(f"kernel_bsmm_rate{rate}", us,
+             f"k_trips={trips}/{k//128};structural_saving="
+             f"{1 - trips/(k//128):.2f}")
+        results[f"bsmm_rate{rate}_trips"] = trips
+    save_json("kernel_bench.json", results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

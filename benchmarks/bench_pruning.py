@@ -1,0 +1,61 @@
+"""Paper Fig. 3 + Fig. 4: auto-pruning search trajectory and per-candidate
+resource utilization, for Jet-DNN and ResNet9.
+
+Emits the per-step (rate, accuracy, resource) curves the figures plot,
+as CSV rows + benchmarks/results/pruning_curves.json.
+"""
+
+from __future__ import annotations
+
+from repro.core.metamodel import MetaModel
+from repro.core.strategies import pruning_strategy
+
+try:
+    from benchmarks.common import emit, save_json
+except ImportError:  # run as a script
+    from common import emit, save_json
+
+
+def run(model: str = "jet_dnn", samples: int = 2048, epochs: int = 2):
+    meta = MetaModel({"ModelGen.train_samples": samples,
+                      "ModelGen.train_epochs": 4})
+    flow = pruning_strategy(model, train_epochs=epochs)
+    meta = flow.execute(meta)
+    probes = meta.trace("pruning.probe")
+    res = meta.get("pruning.result")
+    curve = []
+    for i, p in enumerate(probes):
+        row = {"step": i + 1, "rate": p.get("rate"),
+               "accuracy": p.get("accuracy"),
+               "macs_fraction": p.get("macs_fraction"),
+               "weight_bits": p.get("weight_bits"),
+               "feasible": p.get("feasible", True)}
+        curve.append(row)
+        emit(f"fig3_{model}_s{i+1}",
+             0.0,
+             f"rate={row['rate']:.3f};acc={row['accuracy']:.4f};"
+             f"macs={row['macs_fraction'] if row['macs_fraction'] is not None else 1.0}")
+    summary = {"model": model, "curve": curve,
+               "final_rate": res["pruning_rate"],
+               "final_accuracy": res["accuracy"],
+               "base_accuracy": res["base_accuracy"],
+               "macs_fraction": res["macs_fraction"],
+               "search_steps": res["search_steps"]}
+    emit(f"fig4_{model}_final", 0.0,
+         f"rate={res['pruning_rate']:.3f};"
+         f"dsp_analogue_reduction={1 - res['macs_fraction']:.3f}")
+    return summary
+
+
+def main(models=("jet_dnn", "resnet9")):
+    out = {}
+    for m in models:
+        # resnet9 is heavier: fewer samples
+        out[m] = run(m, samples=1024 if m != "jet_dnn" else 2048,
+                     epochs=1 if m != "jet_dnn" else 2)
+    save_json("pruning_curves.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Roofline table emission: reads the dry-run sweep results
+(benchmarks/results/dryrun_*.json produced by repro.launch.dryrun) and
+prints the §Roofline rows.  One row per (arch x shape x mesh)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+try:
+    from benchmarks.common import RESULTS_DIR, emit
+except ImportError:
+    from common import RESULTS_DIR, emit
+
+
+def rows(path: str):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    n = 0
+    for suffix in ("singlepod", "multipod"):
+        for r in rows(os.path.join(RESULTS_DIR, f"dryrun_{suffix}.json")):
+            name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+            if r["status"] != "ok":
+                emit(name, 0.0, f"{r['status']}:{r.get('reason','')[:40]}")
+                continue
+            rf = r["roofline"]
+            emit(name, rf["bound_s"] * 1e6,
+                 f"dom={rf['dominant'][:-2]};"
+                 f"comp_ms={rf['compute_s']*1e3:.2f};"
+                 f"mem_ms={rf['memory_s']*1e3:.2f};"
+                 f"coll_ms={rf['collective_s']*1e3:.2f};"
+                 f"useful={rf.get('useful_flops_fraction', 0):.3f}")
+            n += 1
+    if n == 0:
+        emit("roofline_missing", 0.0,
+             "run: python -m repro.launch.dryrun --all [--multi-pod]")
+    return n
+
+
+if __name__ == "__main__":
+    main()

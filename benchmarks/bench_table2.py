@@ -1,0 +1,90 @@
+"""Paper Table II analogue: final comparison of optimization strategies on
+Jet-DNN — accuracy vs resource proxies vs roofline-estimated latency.
+
+FPGA columns -> TPU columns (DESIGN.md §2):
+  DSP usage    -> effective MACs per sample (pruning/scaling-structural)
+  LUT usage    -> weight storage bits (quantization + pruning)
+  latency (ns) -> roofline-estimated inference time for batch-1 on one
+                  v5e chip: max(2*MACs/peak_int8, weight_bytes/HBM_bw)
+
+Rows: baseline (fp32, as generated), P-only, Q-only (alpha_q=1%),
+S->P->Q (alpha_q=1%), S->P->Q (alpha_q=4%) — mirroring the paper's
+"this work" rows.
+"""
+
+from __future__ import annotations
+
+from repro.core.metamodel import MetaModel
+from repro.core.strategies import (combined_strategy, pruning_strategy,
+                                   quantization_strategy)
+
+try:
+    from benchmarks.common import emit, save_json
+except ImportError:
+    from common import emit, save_json
+
+PEAK_INT8 = 394e12     # v5e int8 ops/s (2x bf16)
+PEAK_BF16 = 197e12
+HBM_BW = 819e9
+
+CFG = {"ModelGen.train_samples": 2048, "ModelGen.train_epochs": 4,
+       "Pruning.train_epochs": 2, "Scaling.train_epochs": 3,
+       "Scaling.max_trials_num": 2, "Scaling.tolerate_acc_loss": 0.02}
+
+
+def row_from(meta: MetaModel, label: str, int8: bool) -> dict:
+    art = meta.latest("dnn")
+    m = art.metrics
+    macs = m.get("effective_macs", m.get("total_macs"))
+    wbytes = m.get("weight_bits", 0) / 8
+    peak = PEAK_INT8 if int8 else PEAK_BF16
+    lat_ns = max(2 * macs / peak, wbytes / HBM_BW) * 1e9
+    return {"strategy": label, "accuracy": m.get("accuracy"),
+            "effective_macs": macs, "weight_bits": m.get("weight_bits"),
+            "roofline_latency_ns": lat_ns}
+
+
+def main(model: str = "jet_dnn"):
+    rows = []
+
+    meta = MetaModel(dict(CFG))
+    from repro.core.flow import DesignFlow
+    from repro.tasks.model_gen import ModelGen
+    DesignFlow("base").chain(ModelGen(model=model))
+    f = DesignFlow("base")
+    f.chain(ModelGen(model=model))
+    meta = f.execute(meta)
+    rows.append(row_from(meta, "baseline-fp32", int8=False))
+
+    meta = pruning_strategy(model, train_epochs=2).execute(
+        MetaModel(dict(CFG)))
+    rows.append(row_from(meta, "P-only", int8=False))
+
+    meta = quantization_strategy(model, tolerate_acc_loss=0.01).execute(
+        MetaModel(dict(CFG)))
+    rows.append(row_from(meta, "Q-only(a=1%)", int8=True))
+
+    meta = combined_strategy(
+        model, "SPQ",
+        task_params={"Q": {"tolerate_acc_loss": 0.01}}).execute(
+        MetaModel(dict(CFG)))
+    rows.append(row_from(meta, "S-P-Q(a=1%)", int8=True))
+
+    meta = combined_strategy(
+        model, "SPQ",
+        task_params={"Q": {"tolerate_acc_loss": 0.04}}).execute(
+        MetaModel(dict(CFG)))
+    rows.append(row_from(meta, "S-P-Q(a=4%)", int8=True))
+
+    base = rows[0]
+    for r in rows:
+        emit(f"table2_{model}_{r['strategy']}", r["roofline_latency_ns"],
+             f"acc={r['accuracy']:.4f};"
+             f"macs_red={1 - r['effective_macs']/base['effective_macs']:.3f};"
+             f"bits_red={1 - r['weight_bits']/base['weight_bits']:.3f}")
+    save_json("table2.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        _block(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _block(out):
+    import jax
+    for leaf in jax.tree.leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path

@@ -1,0 +1,60 @@
+"""§Perf addendum measurements (run after perf_hillclimb):
+
+A1. qwen110 mb16 + int8 weights, POST STE FIX — the pre-fix run recorded
+    a bogus win (zero-grad backward); this is the honest number.
+A2. qwen110 fit-combo: microbatch32 + loss_chunk256 (greedy search missed
+    the combination; hypothesis: remaining 9GB of peak is logits+acts).
+C1. granite final config + remat_dots_moe + capacity1.0 (collective
+    attack after the fit was won).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import json
+
+from benchmarks.perf_hillclimb import fmt, measure
+from benchmarks.common import RESULTS_DIR
+
+RUNS = {
+    "A1_int8_ste": ("qwen1.5-110b", "train_4k",
+                    {"fsdp": True, "microbatches": 16,
+                     "policy_rules": [["*mlp*", "int8"],
+                                      ["*attn*", "int8"]]}),
+    "A2_fit_combo": ("qwen1.5-110b", "train_4k",
+                     {"fsdp": True, "microbatches": 32,
+                      "cfg_overrides": {"loss_chunk": 256}}),
+    "C1_collective": ("granite-moe-1b-a400m", "train_4k",
+                      {"zero1": True, "microbatches": 4,
+                       "remat": "dots+moe",
+                       "cfg_overrides": {"pad_vocab_to_multiple": 256,
+                                         "capacity_factor": 1.0}}),
+}
+
+
+def main():
+    path = os.path.join(RESULTS_DIR, "perf_addendum.json")
+    out = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            out = json.load(f)
+    for name, (arch, shape, kw) in RUNS.items():
+        print(f"== {name}: {arch} x {shape} {kw}", flush=True)
+        try:
+            r = measure(arch, shape, kw)
+            print("  " + fmt(r), flush=True)
+            out[name] = {"arch": arch, "shape": shape, "config": kw,
+                         "roofline": r}
+        except Exception as e:  # noqa: BLE001
+            print(f"  ERROR {e}")
+            out[name] = {"arch": arch, "shape": shape, "config": kw,
+                         "error": repr(e)}
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1, default=str)
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

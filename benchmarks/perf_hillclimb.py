@@ -1,0 +1,251 @@
+"""§Perf hillclimb driver — hypothesis → change → measure → validate.
+
+Three pairs (chosen per the §Perf selection rule from the corrected
+baseline table):
+  A. qwen1.5-110b x train_4k   — worst roofline bound, memory-dominated,
+                                 does not fit HBM at baseline.
+  B. deepseek-v2-236b x train_4k — most collective-bound (MoE all-to-all +
+                                 FSDP gathers).
+  C. granite-moe-1b-a400m x train_4k — driven through the paper's own
+                                 machinery: the SHARDING-SEARCH O-task +
+                                 QUANTIZATION policy, i.e. MetaML doing
+                                 the hillclimb.
+
+Each step is applied CUMULATIVELY when it confirms (keep) and reverted
+when it refutes, mirroring the per-iteration methodology.  Results land in
+benchmarks/results/perf_hillclimb.json; EXPERIMENTS.md §Perf narrates them.
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_hillclimb [--pair A|B|C]
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import copy
+import json
+import time
+
+from repro.configs.base import SHAPES
+from repro.launch.dryrun import (_cell_model_flops, lower_cell,
+                                 probe_layer_costs)
+from repro.launch.roofline import HW, roofline
+
+try:
+    from benchmarks.common import RESULTS_DIR
+except ImportError:
+    from common import RESULTS_DIR
+
+
+def measure(arch: str, shape_name: str, kw: dict) -> dict:
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    lowered, mesh, model, aux = lower_cell(arch, shape, **kw)
+    compiled = lowered.compile()
+    corrected = probe_layer_costs(arch, shape, **kw)
+    r = roofline(compiled, mesh,
+                 model_flops=_cell_model_flops(arch, shape),
+                 corrected=corrected)
+    r["wall_s"] = time.time() - t0
+    r["fallbacks"] = aux["fallbacks"]
+    return r
+
+
+def fmt(r: dict) -> str:
+    mem = r.get("memory", {})
+    return (f"bound={r['bound_s']*1e3:8.1f}ms dom={r['dominant'][:-2]:10s} "
+            f"comp={r['compute_s']*1e3:7.1f} mem={r['memory_s']*1e3:8.1f} "
+            f"coll={r['collective_s']*1e3:7.1f} "
+            f"peak={mem.get('peak_bytes', 0)/1e9:6.1f}GB "
+            f"fits={r.get('fits_hbm')}")
+
+
+def score(r: dict) -> float:
+    """Objective: roofline bound + heavy penalty for not fitting HBM."""
+    s = r["bound_s"]
+    peak = r.get("memory", {}).get("peak_bytes", 0)
+    if peak > HW["hbm_bytes"]:
+        s += 10.0 * (peak / HW["hbm_bytes"] - 1.0)
+    return s
+
+
+def run_pair(arch: str, shape: str, base_kw: dict, steps: list) -> dict:
+    print(f"\n=== {arch} x {shape} ===", flush=True)
+    incumbent = copy.deepcopy(base_kw)
+    try:
+        base = measure(arch, shape, incumbent)
+    except Exception as e:  # noqa: BLE001
+        print(f"  baseline ERROR: {e}")
+        return {"arch": arch, "shape": shape, "error": repr(e)}
+    print(f"  baseline: {fmt(base)}", flush=True)
+    log = [{"step": "baseline", "hypothesis": "paper-faithful defaults",
+            "config": copy.deepcopy(incumbent), "roofline": base,
+            "verdict": "-"}]
+    cur = base
+    for label, hypothesis, delta in steps:
+        trial = copy.deepcopy(incumbent)
+        for k, v in delta.items():
+            if k == "cfg_overrides":
+                trial.setdefault("cfg_overrides", {})
+                trial["cfg_overrides"].update(v)
+            else:
+                trial[k] = v
+        try:
+            r = measure(arch, shape, trial)
+        except Exception as e:  # noqa: BLE001
+            print(f"  {label}: ERROR {e}")
+            log.append({"step": label, "hypothesis": hypothesis,
+                        "config": trial, "error": repr(e),
+                        "verdict": "error"})
+            continue
+        keep = score(r) < score(cur)
+        verdict = "confirmed" if keep else "refuted"
+        print(f"  {label}: {fmt(r)}  [{verdict}]", flush=True)
+        log.append({"step": label, "hypothesis": hypothesis,
+                    "config": copy.deepcopy(trial), "roofline": r,
+                    "verdict": verdict})
+        if keep:
+            incumbent, cur = trial, r
+    print(f"  final: {fmt(cur)}  "
+          f"(bound {base['bound_s']*1e3:.1f} -> {cur['bound_s']*1e3:.1f} "
+          f"ms, {base['bound_s']/max(cur['bound_s'],1e-12):.2f}x)")
+    return {"arch": arch, "shape": shape, "baseline": base, "final": cur,
+            "final_config": incumbent, "log": log}
+
+
+PAIR_A = ("qwen1.5-110b", "train_4k", {"fsdp": True}, [
+    ("microbatch8",
+     "activation live-set is ~86GB/chip with full-batch backward; 8 "
+     "microbatches cut the live activations ~8x at unchanged math -> peak "
+     "memory down, terms unchanged",
+     {"microbatches": 8}),
+    ("mea_bf16",
+     "MEA attention einsums stream fp32 operands; bf16 operands halve "
+     "attention HBM traffic (fp32 accum kept) -> memory term down by the "
+     "attention share (~15-30% at S=4k)",
+     {"cfg_overrides": {"mea_bf16": True}}),
+    ("loss_chunk512",
+     "the (B,S,152k) fp32 softmax is ~10GB live; chunking the loss over "
+     "512-token slices bounds it ~8x -> peak down, bytes unchanged",
+     {"cfg_overrides": {"loss_chunk": 512}}),
+    ("remat_dots",
+     "config remat=full recomputes every dot in the backward; "
+     "dots-saveable trades ~1.3x memory for ~25% fewer recomputed FLOPs "
+     "-> compute term down if memory still fits",
+     {"remat": "dots"}),
+    ("microbatch16",
+     "if peak still >16GB after the above, halving microbatch size again "
+     "buys the remaining fit",
+     {"microbatches": 16}),
+    ("grad_compress",
+     "int8 DP gradient all-reduce with error feedback cuts the grad "
+     "all-reduce payload ~2x vs bf16/4x vs fp32 -> collective term down",
+     {"grad_compression": True}),
+    ("int8_weights",
+     "weight-only int8 on attn+mlp halves weight-read bytes (the "
+     "decode/memory floor); NOTE the pre-fusion proxy double-counts the "
+     "dequant converts, so the measured term may not drop even where "
+     "real HBM traffic would",
+     {"policy_rules": [["*mlp*", "int8"], ["*attn*", "int8"]]}),
+    ("scale_out_2pods",
+     "peak/chip is ~25GB at 256 chips: per-chip activations, grads and "
+     "moments all halve at 512 chips (2x16x16) -> fits 16GB; per-chip "
+     "terms halve too (this is the capacity answer, not a same-mesh "
+     "speedup)",
+     {"multi_pod": True}),
+])
+
+PAIR_B = ("deepseek-v2-236b", "train_4k", {"fsdp": True}, [
+    # NOTE a "moe_fsdp_partial" variant (keep f-sharded expert weights and
+    # psum the down-proj partials instead of gathering weights) was
+    # REFUTED at the correctness stage: batch shards over the same
+    # (pod,data) axes, so the psum mixes different data ranks' tokens.
+    # Recorded here as a negative result; not measurable as a step.
+    ("remat_dots_moe",
+     "config remat=full re-runs the forward inside the backward, which "
+     "REPEATS every MoE all-to-all and FSDP gather (~2x the collective "
+     "term); saving dot outputs + the tagged a2a results "
+     "(save_only_these_names('moe_recv')) removes the replay",
+     {"remat": "dots+moe"}),
+    ("capacity1.0",
+     "MoE a2a payload scales with the capacity factor; cf 1.25->1.0 cuts "
+     "a2a bytes 20% (dropped-token risk is a training-quality knob, "
+     "measured separately by the O-task accuracy loop)",
+     {"cfg_overrides": {"capacity_factor": 1.0}}),
+    ("mea_bf16",
+     "128-head MLA attention at S=4k streams large fp32 score tensors; "
+     "bf16 operands halve that traffic",
+     {"cfg_overrides": {"mea_bf16": True}}),
+    ("microbatch4",
+     "microbatching repeats the FSDP weight all-gather per microbatch "
+     "(collective UP ~4x on the gather share) but divides activation "
+     "peak ~4x; keep only if the fit wins the score",
+     {"microbatches": 4}),
+    ("loss_chunk512",
+     "the (B,S,102k)-vocab fp32 softmax is multi-GB live; chunking "
+     "bounds it",
+     {"cfg_overrides": {"loss_chunk": 512}}),
+    ("grad_compress",
+     "int8 error-feedback compression on the DP grad all-reduce; "
+     "deepseek grads are the largest absolute payload of any knob",
+     {"grad_compression": True}),
+])
+
+PAIR_C = ("granite-moe-1b-a400m", "train_4k", {}, [
+    ("pad_vocab",
+     "vocab 49155 % 16 != 0 forces replicated embed/lm_head and "
+     "replicated (B,S,49155) logits; padding to 49408 (x256) shards the "
+     "vocab dim 16-way -> logits memory and lm_head flops per chip /16",
+     {"cfg_overrides": {"pad_vocab_to_multiple": 256}}),
+    ("zero1",
+     "Adam moments are fp32 x 1.3B params replicated over data; ZeRO-1 "
+     "shards them 16-way -> ~9.7GB/chip saved, no term change",
+     {"zero1": True}),
+    ("mea_bf16",
+     "same bf16-operand attention traffic halving as pair A",
+     {"cfg_overrides": {"mea_bf16": True}}),
+    ("microbatch4",
+     "granite activations at B_loc=16,S=4k dominate peak; 4 microbatches "
+     "cut them 4x",
+     {"microbatches": 4}),
+    ("int8_experts",
+     "QUANTIZATION O-task policy (int8 expert FFNs, alpha_q-validated on "
+     "the DNN stage) executed at the lowered stage: int8 MXU dots double "
+     "throughput -> compute term down ~2x on the expert share",
+     {"policy_rules": [["*moe/experts*", "int8"], ["*mlp*", "int8"]]}),
+    ("remat_dots_moe",
+     "collective stayed dominant after the fit was won: remat replays "
+     "the MoE a2a in the backward; saving the tagged a2a results "
+     "removes the replayed collectives",
+     {"remat": "dots+moe"}),
+    ("capacity1.0",
+     "a2a payload scales with capacity factor; 1.25 -> 1.0 trims 20%",
+     {"cfg_overrides": {"capacity_factor": 1.0}}),
+])
+
+PAIRS = {"A": PAIR_A, "B": PAIR_B, "C": PAIR_C}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=["A", "B", "C"], default=None)
+    args = ap.parse_args()
+    keys = [args.pair] if args.pair else ["C", "A", "B"]  # cheapest first
+    out = {}
+    path = os.path.join(RESULTS_DIR, "perf_hillclimb.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            out = json.load(f)
+    for k in keys:
+        arch, shape, base_kw, steps = PAIRS[k]
+        out[k] = run_pair(arch, shape, base_kw, steps)
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1, default=str)
+    print(f"\nwrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  bench_pruning  -> Fig. 3 / Fig. 4 (auto-pruning curves + resources)
+  bench_combined -> Fig. 5 (combined strategies, order sensitivity)
+  bench_table2   -> Table II (strategy comparison, resource proxies)
+  bench_kernels  -> kernel micro-benchmarks (structural savings)
+  bench_roofline -> §Roofline rows from the dry-run sweeps
+"""
+import sys
+
+
+def main() -> None:
+    if "benchmarks" not in sys.modules:
+        sys.path.insert(0, __file__.rsplit("/", 2)[0])
+    from benchmarks import (bench_combined, bench_kernels, bench_pruning,
+                            bench_roofline, bench_table2)
+    print("name,us_per_call,derived")
+    bench_pruning.main()
+    bench_combined.main()
+    bench_table2.main()
+    bench_kernels.main()
+    bench_roofline.main()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,83 @@
+"""Prebuilt design flows (paper Fig. 2): single-O-task strategies and the
+combined cross-stage strategies, in any order — the point of the paper is
+that these are a few lines to assemble and re-order.
+
+    flow = pruning_strategy("jet_dnn")            # Fig. 2(a)
+    flow = combined_strategy("jet_dnn", "SPQ")    # Fig. 2(b)
+    flow = combined_strategy("jet_dnn", "PSQ")    # Fig. 2(c) variant
+    meta = flow.execute()
+
+The LM dry-run/roofline flow expresses deliverable (e)/(g) as a MetaML
+flow: ModelGen → [O-tasks] → Lower → Compile → Roofline.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core.flow import DesignFlow
+from repro.core.metamodel import MetaModel
+from repro.tasks.lower import Compile, Lower, Roofline
+from repro.tasks.model_gen import ModelGen
+from repro.tasks.pruning import Pruning
+from repro.tasks.quantization import Quantization
+from repro.tasks.scaling import Scaling
+from repro.tasks.sharding_search import ShardingSearch
+
+O_TASKS = {"P": Pruning, "S": Scaling, "Q": Quantization,
+           "H": ShardingSearch}
+
+
+def pruning_strategy(model: str = "jet_dnn", **params) -> DesignFlow:
+    """Paper Fig. 2(a): MODEL-GEN → PRUNING."""
+    flow = DesignFlow(f"pruning({model})")
+    flow.chain(ModelGen(model=model), Pruning(**params))
+    return flow
+
+
+def scaling_strategy(model: str = "jet_dnn", **params) -> DesignFlow:
+    flow = DesignFlow(f"scaling({model})")
+    flow.chain(ModelGen(model=model), Scaling(**params))
+    return flow
+
+
+def quantization_strategy(model: str = "jet_dnn", **params) -> DesignFlow:
+    flow = DesignFlow(f"quantization({model})")
+    flow.chain(ModelGen(model=model), Quantization(**params))
+    return flow
+
+
+def combined_strategy(model: str = "jet_dnn", order: str = "SPQ",
+                      task_params: dict[str, dict] | None = None,
+                      model_params: dict | None = None) -> DesignFlow:
+    """Combined cross-stage strategy with O-tasks in ``order`` — e.g.
+    "SPQ" = scaling → pruning → quantization (paper Fig. 2(b)); "PS" =
+    pruning → scaling (Fig. 5(b)).  Reordering is a one-char edit — the
+    customizability claim of the paper."""
+    task_params = task_params or {}
+    flow = DesignFlow(f"{'+'.join(order)}({model})")
+    tasks: list[Any] = [ModelGen(model=model, **(model_params or {}))]
+    for ch in order:
+        tasks.append(O_TASKS[ch](**task_params.get(ch, {})))
+    flow.chain(*tasks)
+    return flow
+
+
+def dryrun_flow(arch: str, shape: str = "train_4k",
+                multi_pod: bool = False, o_tasks: str = "",
+                task_params: dict[str, dict] | None = None) -> DesignFlow:
+    """Deliverables (e)/(g) as a MetaML flow:
+    ModelGen → [O-tasks] → Lower → Compile → Roofline."""
+    task_params = task_params or {}
+    flow = DesignFlow(f"dryrun({arch}@{shape})")
+    tasks: list[Any] = [ModelGen(model=arch, train_en=False)]
+    for ch in o_tasks:
+        tasks.append(O_TASKS[ch](**task_params.get(ch, {})))
+    tasks += [Lower(shape=shape, multi_pod=multi_pod), Compile(),
+              Roofline()]
+    flow.chain(*tasks)
+    return flow
+
+
+def run(flow: DesignFlow, cfg: dict | None = None) -> MetaModel:
+    return flow.execute(MetaModel(cfg))

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: block-sparse matmul over a static 128x128 block mask.
+
+Executes the PRUNING O-task's block masks: a zero weight block is the TPU
+analogue of a deleted DSP on a fully-unrolled FPGA design (DESIGN.md §2).
+The mask is known at compile time (pruning is a training-time decision), so
+the grid loops over a *compacted* per-output-column list of live k-blocks
+(host-precomputed, -1 padded): the trip count is ``max_live`` (densest
+column), not ``k_blocks`` — compute drops structurally with block sparsity.
+
+Data-dependent tile selection uses the TPU scalar-prefetch mechanism
+(PrefetchScalarGridSpec): the live-block index array is prefetched to SMEM
+and drives the x/w BlockSpec index maps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 128
+
+
+def _bsmm_kernel(kidx_ref, x_ref, w_ref, out_ref, acc_ref, *, steps: int):
+    t = pl.program_id(2)
+    j = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = kidx_ref[j, t] >= 0
+
+    @pl.when(live)
+    def _step():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(t == steps - 1)
+    def _finish():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def compact_block_index(block_map: np.ndarray) -> np.ndarray:
+    """(kb, nb) 0/1 occupancy → (nb, max_live) k-block indices, -1 padded."""
+    kb, nb = block_map.shape
+    cols = [np.nonzero(block_map[:, j])[0] for j in range(nb)]
+    max_live = max([len(c) for c in cols] + [1])
+    out = -np.ones((nb, max_live), np.int32)
+    for j, c in enumerate(cols):
+        out[j, :len(c)] = c
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def block_sparse_matmul(x: jnp.ndarray, w: jnp.ndarray,
+                        kindex: jnp.ndarray, *,
+                        block: int = BLOCK,
+                        interpret: bool = False) -> jnp.ndarray:
+    """x: (M, K); w: (K, N) (already masked); kindex: (N/block, max_live)
+    from :func:`compact_block_index`.  Returns x @ w over live blocks."""
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(block, m)
+    assert m % bm == 0 and k % block == 0 and n % block == 0
+    nb = n // block
+    steps = int(kindex.shape[1])
+    grid = (m // bm, nb, steps)
+
+    def x_map(i, j, t, kidx):
+        return (i, jnp.maximum(kidx[j, t], 0))
+
+    def w_map(i, j, t, kidx):
+        return (jnp.maximum(kidx[j, t], 0), j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, block), x_map),
+            pl.BlockSpec((block, block), w_map),
+        ],
+        out_specs=pl.BlockSpec((bm, block), lambda i, j, t, kidx: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, block), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_bsmm_kernel, steps=steps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(kindex, x, w)
+    return out

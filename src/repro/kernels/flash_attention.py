@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window / GQA).
+
+The TPU-optimized form of models/layers.py::mea_attention (same online-
+softmax math; that function is the pure-jnp oracle).  Tiling: q tile 128 x
+kv tile 128; (m, l, acc) live in VMEM scratch across the kv-loop (innermost
+grid dim), so HBM traffic is O(S) per q tile instead of O(S^2) — this is
+what moves the 32k-prefill memory roofline term (EXPERIMENTS.md §Perf).
+
+Causal skipping: kv tiles strictly above the diagonal are skipped via
+pl.when (no MXU work is issued), recovering the ~2x causal FLOP saving that
+the naive jnp path wastes.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+BQ, BKV = 128, 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
+                  kv_steps: int, scale: float, causal: bool, window: int,
+                  bq: int, bkv: int, seq_kv: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    kv_start = kj * bkv
+    if causal:  # skip tiles strictly above the diagonal
+        run = kv_start <= q_start + bq - 1
+    else:
+        run = jnp.bool_(True)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kv_pos = kv_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv),
+                                                     1)
+        mask = kv_pos < seq_kv
+        if causal:
+            mask &= q_pos >= kv_pos
+        if window:
+            mask &= (q_pos - kv_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == kv_steps - 1)
+    def _finish():
+        out_ref[0] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-30)).astype(
+                          out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B,Sq,H,D); k/v: (B,Skv,KV,D) with H % KV == 0.
+    Returns (B,Sq,H,D)."""
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    # fold batch*heads, pad seq to tile multiples
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
+    bq = min(BQ, sq)
+    bkv = min(BKV, skv)
+    pad_q = (-sq) % bq
+    pad_kv = (-skv) % bkv
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_kv), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_kv), (0, 0)))
+    sq_p, skv_p = sq + pad_q, skv + pad_kv
+    kv_steps = skv_p // bkv
+    grid = (b * h, sq_p // bq, kv_steps)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, kv_steps=kv_steps,
+                          scale=1.0 / math.sqrt(d), causal=causal,
+                          window=window, bq=bq, bkv=bkv, seq_kv=skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bh, i, j: (bh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out[:, :sq].reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+    return out

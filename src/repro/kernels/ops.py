@@ -1,0 +1,31 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret=True`` executes the kernel bodies in Python on CPU (how this
+container validates them); on a real TPU the same calls lower to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.block_sparse_matmul import (block_sparse_matmul,
+                                               compact_block_index)
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quant_matmul import quant_matmul
+from repro.sparsity.masks import block_map
+
+__all__ = ["quant_matmul", "flash_attention", "block_sparse_matmul",
+           "masked_matmul", "compact_block_index"]
+
+
+def masked_matmul(x: jnp.ndarray, w: jnp.ndarray, mask,
+                  *, block: int = 128, interpret: bool = False):
+    """Convenience: derive the live-block index from a full-res mask and run
+    the block-sparse kernel.  (The index would be cached with the pruned
+    checkpoint in a real deployment.)"""
+    wm = (w.astype(jnp.float32) * mask).astype(w.dtype)
+    bmap = block_map(np.asarray(mask), block)
+    kidx = jnp.asarray(compact_block_index(bmap))
+    return block_sparse_matmul(x, wm, kidx, block=block,
+                               interpret=interpret)

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: dynamic-activation int8 x int8 matmul.
+
+Executes the QUANTIZATION O-task's int8 policy on the MXU (DESIGN.md §2).
+The activation is quantized per-row on the fly (absmax/127), the weight
+arrives pre-quantized per-output-channel; accumulation is int32 in VMEM and
+dequantization happens once per output tile.
+
+Tiling: out tile (BM=128, BN=128), contraction loop in BK=512 slabs — MXU
+dims are multiples of 128, the int8 MXU path packs 2x per pass.  Working
+set per grid step: BM*BK + BK*BN int8 + BM*BN int32 ≈ 128KB + 64KB ≪ VMEM.
+
+``ref.py`` holds the pure-jnp oracle; tests sweep shapes/dtypes with
+interpret=True (CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BM, BN, BK = 128, 128, 512
+
+
+def _qmm_kernel(xq_ref, xs_ref, wq_ref, ws_ref, out_ref, acc_ref, *,
+                k_steps: int):
+    """Grid: (m_tiles, n_tiles, k_steps); k is the innermost loop."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = xq_ref[...]
+    w = wq_ref[...]
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        acc = acc_ref[...].astype(jnp.float32)
+        out_ref[...] = (acc * xs_ref[...] * ws_ref[...]
+                        ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+def quant_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
+                 interpret: bool = False,
+                 out_dtype=jnp.float32) -> jnp.ndarray:
+    """x: (M, K) float; w: (K, N) float.  Returns (M, N) ~= x @ w computed
+    through the int8 MXU path."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    # host-side quantization (weights would be pre-quantized in practice)
+    xf = x.astype(jnp.float32)
+    xs = jnp.maximum(jnp.max(jnp.abs(xf), axis=1, keepdims=True), 1e-8) \
+        / 127.0
+    xq = jnp.clip(jnp.round(xf / xs), -127, 127).astype(jnp.int8)
+    wf = w.astype(jnp.float32)
+    ws = jnp.maximum(jnp.max(jnp.abs(wf), axis=0, keepdims=True), 1e-8) \
+        / 127.0
+    wq = jnp.clip(jnp.round(wf / ws), -127, 127).astype(jnp.int8)
+
+    bm, bn = min(BM, m), min(BN, n)
+    bk = min(BK, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"shapes ({m},{k})x({k},{n}) not tileable by ({bm},{bn},{bk})"
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(xq, xs, wq, ws)
+    return out

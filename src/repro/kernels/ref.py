@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets for tests)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Same quantization math as the kernel, plain jnp."""
+    xf = x.astype(jnp.float32)
+    xs = jnp.maximum(jnp.max(jnp.abs(xf), axis=1, keepdims=True), 1e-8) \
+        / 127.0
+    xq = jnp.round(jnp.clip(xf / xs, -127, 127)).astype(jnp.int32)
+    wf = w.astype(jnp.float32)
+    ws = jnp.maximum(jnp.max(jnp.abs(wf), axis=0, keepdims=True), 1e-8) \
+        / 127.0
+    wq = jnp.round(jnp.clip(wf / ws, -127, 127)).astype(jnp.int32)
+    # exact int32 accumulation — matches the kernel bit-for-bit
+    acc = jax.lax.dot_general(xq, wq, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * xs * ws
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int = 0) -> jnp.ndarray:
+    """Naive softmax attention with GQA/causal/window semantics."""
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def block_sparse_matmul_ref(x: jnp.ndarray, w_masked: jnp.ndarray
+                            ) -> jnp.ndarray:
+    """Dense reference over the (already masked) weight."""
+    return x.astype(jnp.float32) @ w_masked.astype(jnp.float32)

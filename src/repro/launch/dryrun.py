@@ -1,0 +1,320 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the placeholder-device flag before ANY other import (jax locks the
+device count on first init) — see the first two lines.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds the model + logical-axis shardings,
+  3. jit-lowers the REAL train/prefill/decode step function with explicit
+     in/out shardings,
+  4. ``.compile()``s it — sharding mismatches, unsupported collectives and
+     compile-time OOMs surface here,
+  5. records memory_analysis / cost_analysis / collective-bytes roofline
+     terms into benchmarks/results/dryrun_<...>.json for EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+      --shape train_4k [--multi-pod] [--fsdp] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  (env var must precede jax import)
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (SHAPES, ShapeSpec, active_params,
+                                model_flops_per_token, shape_applicable,
+                                total_params)
+from repro.configs.registry import ALIASES, ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import format_roofline, roofline
+from repro.models.api import build_model
+from repro.optim.optimizers import adamw
+from repro.parallel.sharding import ShardingRules
+from repro.runtime.train_loop import (batch_shardings, cache_shardings,
+                                      make_decode_step, make_prefill_step,
+                                      make_train_step, state_shardings)
+
+# archs whose params+moments need FSDP sharding over the dp axes
+FSDP_ARCHS = {"deepseek-v2-236b", "qwen1.5-110b", "chameleon-34b"}
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results")
+
+
+def _abstract_opt_state(params_abs):
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)  # noqa: E731
+    return {"step": jax.ShapeDtypeStruct((), jnp.int32),
+            "m": jax.tree.map(f32, params_abs),
+            "v": jax.tree.map(f32, params_abs)}
+
+
+def lower_cell(arch: str, shape: ShapeSpec, *, multi_pod: bool = False,
+               fsdp: bool | None = None,
+               rules_overrides: dict | None = None,
+               cache_seq_axis: str | None = None,
+               microbatches: int = 1,
+               grad_compression: bool = False,
+               remat: str | None = None,
+               donate: bool = True,
+               zero1: bool = False,
+               policy_rules: list | None = None,
+               moe_fsdp_mode: str = "gather",
+               unroll_microbatches: bool = False,
+               cfg_overrides: dict | None = None):
+    """Returns (lowered, mesh, model, aux) — compile is the caller's call."""
+    cfg = get_config(arch)
+    if remat is not None:
+        cfg = cfg.replace(remat=remat)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    use_fsdp = fsdp if fsdp is not None else (cfg.name in FSDP_ARCHS)
+    overrides = dict(rules_overrides or {})
+    if cache_seq_axis is not None:
+        overrides["cache_seq"] = cache_seq_axis
+    rules = ShardingRules.default(mesh, overrides=overrides)
+    policy = None
+    if policy_rules:
+        from repro.models.api import DEFAULT_EXEMPT
+        from repro.quant.policy import PrecisionPolicy
+        policy = PrecisionPolicy(default="bf16", exempt=DEFAULT_EXEMPT,
+                                 rules=[tuple(r) for r in policy_rules])
+    model = build_model(cfg, mesh=mesh, fsdp_params=use_fsdp,
+                        policy=policy, moe_fsdp_mode=moe_fsdp_mode)
+    specs = model.input_specs(shape)
+
+    with mesh:
+        if shape.kind == "train":
+            optimizer = adamw(3e-4)
+            step_fn = make_train_step(
+                model, optimizer, microbatches=microbatches,
+                grad_compression=grad_compression,
+                unroll_microbatches=unroll_microbatches)
+            sshard = state_shardings(model, rules, "adamw", fsdp=use_fsdp,
+                                     zero1=zero1)
+            state_abs = {"params": model.abstract_params(),
+                         "opt": _abstract_opt_state(
+                             model.abstract_params())}
+            if grad_compression:
+                f32 = lambda s: jax.ShapeDtypeStruct(  # noqa: E731
+                    s.shape, jnp.float32)
+                state_abs["residuals"] = jax.tree.map(
+                    f32, model.abstract_params())
+                sshard = dict(sshard, residuals=sshard["params"])
+            bshard = batch_shardings(model, rules, specs)
+            fn = jax.jit(step_fn,
+                         in_shardings=(sshard, bshard),
+                         donate_argnums=(0,) if donate else ())
+            lowered = fn.lower(state_abs, specs)
+        elif shape.kind == "prefill":
+            step_fn = make_prefill_step(model, shape.seq_len)
+            pshard = state_shardings(model, rules, "sgd",
+                                     fsdp=use_fsdp)["params"]
+            bshard = batch_shardings(model, rules, specs)
+            cshard = cache_shardings(model, rules, shape.global_batch,
+                                     shape.seq_len)
+            fn = jax.jit(step_fn, in_shardings=(pshard, bshard),
+                         out_shardings=(None, cshard))
+            lowered = fn.lower(model.abstract_params(), specs)
+        else:  # decode
+            step_fn = make_decode_step(model)
+            pshard = state_shardings(model, rules, "sgd",
+                                     fsdp=use_fsdp)["params"]
+            cache_abs, _ = model.abstract_cache(shape.global_batch,
+                                                shape.seq_len)
+            cshard = cache_shardings(model, rules, shape.global_batch,
+                                     shape.seq_len)
+            tshard = rules.sharding_for(("batch", None), (b := shape.
+                                                          global_batch, 1))
+            fn = jax.jit(step_fn,
+                         in_shardings=(pshard, cshard, tshard),
+                         out_shardings=(None, cshard),
+                         donate_argnums=(1,) if donate else ())
+            lowered = fn.lower(model.abstract_params(), cache_abs,
+                               jax.ShapeDtypeStruct((b, 1), jnp.int32))
+    aux = {"fsdp": use_fsdp, "fallbacks": sorted(set(rules.fallbacks))}
+    return lowered, mesh, model, aux
+
+
+def _cell_model_flops(arch: str, shape: ShapeSpec) -> float:
+    cfg = get_config(arch)
+    per_tok = model_flops_per_token(cfg)
+    if shape.kind == "train":
+        return per_tok * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        # forward only
+        return per_tok / 3.0 * shape.seq_len * shape.global_batch
+    return per_tok / 3.0 * shape.global_batch  # one token per request
+
+
+def _scan_unit(cfg) -> tuple[int, int]:
+    """(layers-per-scan-unit, n-units) for the layer-cost extrapolation."""
+    if cfg.family == "ssm":
+        return 2, cfg.n_layers // 2
+    if cfg.family == "hybrid":
+        return cfg.hybrid_period, cfg.n_layers // cfg.hybrid_period
+    return 1, cfg.n_layers
+
+
+def probe_layer_costs(arch: str, shape: ShapeSpec, *,
+                      multi_pod: bool = False, **kw) -> dict:
+    """XLA cost analysis counts while-loop (scan) bodies ONCE, so the raw
+    per-step FLOPs / bytes / collective-bytes of a scanned L-layer model
+    are undercounted (validated empirically — EXPERIMENTS.md §Roofline).
+
+    Fix: compile UNROLLED 1-unit and 2-unit variants of the model at full
+    width on the same mesh and extrapolate linearly:
+
+        cost(L) = cost(1) + (L - 1) * (cost(2) - cost(1))
+
+    Returns corrected {flops, bytes, collective_bytes} per chip.
+    """
+    cfg = get_config(arch)
+    unit, n_units = _scan_unit(cfg)
+    out = {}
+    base_kw = dict(kw)
+    base_ov = base_kw.pop("cfg_overrides", None) or {}
+    # the microbatch loop is ALSO a scan whose body cost_analysis counts
+    # once — unroll it in probe compiles so microbatched costs are real
+    base_kw["unroll_microbatches"] = True
+    for k in (1, 2):
+        ov = dict(base_ov)
+        ov.update({"n_layers": unit * k, "scan_layers": False})
+        if cfg.enc_dec:
+            ov["n_enc_layers"] = k
+        lowered, mesh, model, _ = lower_cell(
+            arch, shape, multi_pod=multi_pod, cfg_overrides=ov, **base_kw)
+        compiled = lowered.compile()
+        from repro.launch.roofline import parse_collectives
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        chips = int(np.prod(mesh.devices.shape))
+        coll = parse_collectives(compiled.as_text(), chips)
+        out[k] = {"flops": float(ca.get("flops", 0.0)),
+                  "bytes": float(ca.get("bytes accessed", 0.0)),
+                  "coll": coll.total_bytes,
+                  "coll_by_kind": dict(coll.operand_bytes)}
+    corrected = {}
+    for key in ("flops", "bytes", "coll"):
+        per_unit = out[2][key] - out[1][key]
+        corrected[key] = out[1][key] + (n_units - 1) * per_unit
+    corrected["coll_by_kind"] = {
+        kind: out[1]["coll_by_kind"][kind] + (n_units - 1)
+        * (out[2]["coll_by_kind"][kind] - out[1]["coll_by_kind"][kind])
+        for kind in out[1]["coll_by_kind"]}
+    corrected["n_units"] = n_units
+    corrected["probe_1"] = out[1]
+    corrected["probe_2"] = out[2]
+    return corrected
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True, correct_scan: bool = True,
+             **kw) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, shape)
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "params_total": total_params(cfg),
+                 "params_active": active_params(cfg)}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        if verbose:
+            print(f"[{arch} x {shape_name}] SKIP: {why}")
+        return rec
+    t0 = time.time()
+    try:
+        lowered, mesh, model, aux = lower_cell(arch, shape,
+                                               multi_pod=multi_pod, **kw)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        corrected = None
+        if correct_scan:
+            try:
+                corrected = probe_layer_costs(arch, shape,
+                                              multi_pod=multi_pod, **kw)
+            except Exception as e:  # noqa: BLE001
+                rec["probe_error"] = repr(e)
+        r = roofline(compiled, mesh,
+                     model_flops=_cell_model_flops(arch, shape),
+                     corrected=corrected)
+        rec.update(status="ok", roofline=r, lower_s=t_lower,
+                   compile_s=t_compile, **aux)
+        if verbose:
+            print(format_roofline(f"{arch} x {shape_name} x {rec['mesh']}",
+                                  r))
+            print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s "
+                  f"fallbacks={aux['fallbacks']}")
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=repr(e),
+                   traceback=traceback.format_exc())
+        if verbose:
+            print(f"[{arch} x {shape_name}] ERROR: {e}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fsdp", action="store_true", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        archs = [args.arch] if args.arch else ARCH_IDS
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        cells = [(a, s) for a in archs for s in shapes]
+
+    results = []
+    for arch, shape in cells:
+        results.append(run_cell(arch, shape, multi_pod=args.multi_pod,
+                                fsdp=args.fsdp))
+
+    out = args.out
+    if out is None:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        suffix = "multipod" if args.multi_pod else "singlepod"
+        out = os.path.join(RESULTS_DIR, f"dryrun_{suffix}.json")
+    existing = []
+    if os.path.exists(out):
+        with open(out) as f:
+            existing = json.load(f)
+    keyed = {(r["arch"], r["shape"], r["mesh"]): r for r in existing}
+    for r in results:
+        r.pop("traceback", None)
+        keyed[(r["arch"], r["shape"], r["mesh"])] = r
+    with open(out, "w") as f:
+        json.dump(list(keyed.values()), f, indent=1)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_err = len(results) - n_ok - n_skip
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"-> {out}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

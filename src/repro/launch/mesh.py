@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device;
+only launch/dryrun.py forces the 512-device placeholder platform.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 ("data","model") single pod; 2x16x16 ("pod","data","model")
+    for the 2-pod / 512-chip configuration."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    devs = np.array(jax.devices()[:data * model]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,209 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs      / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes      / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+``cost_analysis()`` supplies HLO_FLOPs / HLO_bytes; collective bytes are
+NOT in cost_analysis, so we parse the optimized HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Operand sizes are recovered from result shapes +
+replica-group sizes (all-gather operand = result/group; reduce-scatter
+operand = result*group; others operand≈result).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+HW = {
+    "peak_flops": 197e12,     # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,          # bytes/s per chip
+    "link_bw": 50e9,          # bytes/s per ICI link
+    "hbm_bytes": 16e9,        # v5e HBM capacity
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "f8e4m3": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.3 = bf16[4,1024]{1,0} all-gather(...)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9_]+)\[([0-9,]*)\][^\s]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_INSTR_RE = re.compile(
+    r"=\s*\((.*?)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{(.*?)\}\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0.0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return float(n * b)
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return world
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    operand_bytes: dict[str, float]
+    counts: dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.operand_bytes.values())
+
+
+def parse_collectives(hlo_text: str, world: int) -> CollectiveStats:
+    operand_bytes = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        kind = None
+        shapes: list[tuple[str, str]] = []
+        m = _INSTR_RE.search(line)
+        if m:
+            kind = m.group(3)
+            shapes = [(m.group(1), m.group(2))]
+        else:
+            mt = _TUPLE_INSTR_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                shapes = _SHAPE_RE.findall(mt.group(1))
+        if kind is None:
+            continue
+        if "-done(" in line:   # async pair: count only the -start
+            continue
+        result = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        g = max(1, _group_size(line, world))
+        if kind == "all-gather":
+            operand = result / g
+        elif kind == "reduce-scatter":
+            operand = result * g
+        else:
+            operand = result
+        operand_bytes[kind] += operand
+        counts[kind] += 1
+    return CollectiveStats(operand_bytes, counts)
+
+
+def roofline(compiled, mesh, model_flops: float | None = None,
+             lowered_text: str | None = None,
+             corrected: dict | None = None) -> dict[str, Any]:
+    """Derive roofline terms from a jax.stages.Compiled.
+
+    ``corrected``: scan-body-undercount correction from
+    launch.dryrun.probe_layer_costs — when given, its extrapolated
+    flops/bytes/collective-bytes replace the raw (body-counted-once)
+    values; raw values are kept under ``raw_*`` keys.
+    """
+    chips = int(np.prod(mesh.devices.shape))
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll = parse_collectives(text, chips)
+    raw = {"raw_flops": flops, "raw_bytes": byts,
+           "raw_collective_bytes": coll.total_bytes}
+    if corrected is not None:
+        flops = corrected["flops"]
+        byts = corrected["bytes"]
+        coll = CollectiveStats({"corrected": corrected["coll"]},
+                               dict(coll.counts))
+
+    # cost_analysis totals are per-device for SPMD modules
+    compute_t = flops / HW["peak_flops"]
+    memory_t = byts / HW["hbm_bw"]
+    collective_t = coll.total_bytes / HW["link_bw"]
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+            "peak_bytes": (getattr(ma, "argument_size_in_bytes", 0)
+                           + getattr(ma, "temp_size_in_bytes", 0)),
+        }
+    except Exception:  # noqa: BLE001 — backend may not support it
+        pass
+
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": collective_t}
+    dominant = max(terms, key=terms.get)
+    out = {
+        **terms,
+        "dominant": dominant,
+        "bound_s": max(terms.values()),
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": byts,
+        "collective_bytes_per_chip": coll.total_bytes,
+        "collective_counts": coll.counts,
+        "collective_bytes_by_kind": coll.operand_bytes,
+        "chips": chips,
+        "memory": mem,
+        "fits_hbm": (mem.get("peak_bytes", 0) <= HW["hbm_bytes"])
+        if mem else None,
+        **raw,
+        "scan_corrected": corrected is not None,
+    }
+    if model_flops is not None:
+        out["model_flops"] = model_flops
+        hlo_total = flops * chips
+        out["useful_flops_fraction"] = (model_flops / hlo_total
+                                        if hlo_total else 0.0)
+        out["mfu_bound"] = (model_flops / HW["peak_flops"] / chips
+                            / max(out["bound_s"], 1e-30))
+    return out
+
+
+def format_roofline(name: str, r: dict[str, Any]) -> str:
+    lines = [f"[{name}] chips={r['chips']}",
+             f"  compute    {r['compute_s']*1e3:10.3f} ms"
+             f"  ({r['hlo_flops_per_chip']/1e12:.2f} TFLOP/chip)",
+             f"  memory     {r['memory_s']*1e3:10.3f} ms"
+             f"  ({r['hlo_bytes_per_chip']/1e9:.2f} GB/chip)",
+             f"  collective {r['collective_s']*1e3:10.3f} ms"
+             f"  ({r['collective_bytes_per_chip']/1e9:.3f} GB/chip)",
+             f"  dominant: {r['dominant']}  bound: "
+             f"{r['bound_s']*1e3:.3f} ms"]
+    if "useful_flops_fraction" in r:
+        lines.append(f"  MODEL/HLO flops: {r['useful_flops_fraction']:.3f}"
+                     f"   MFU-bound: {r.get('mfu_bound', 0):.3f}")
+    if r.get("memory"):
+        lines.append(f"  mem/chip: args {r['memory']['argument_bytes']/1e9:.2f} GB"
+                     f" + temp {r['memory']['temp_bytes']/1e9:.2f} GB"
+                     f"  fits16GB={r['fits_hbm']}")
+    return "\n".join(lines)

@@ -1,0 +1,187 @@
+"""The paper's own evaluation workloads: Jet-DNN, VGG7, ResNet9.
+
+Paper §V-A: "benchmark workloads from typical DNN applications, including
+jet identification (Jet-DNN), image classification using VGG7 and ResNet9
+networks.  The datasets used are: Jet-HLF, MNIST and SVHN."
+
+Jet-DNN is the HLS4ML jet-tagging MLP (16 → 64 → 32 → 32 → 5, ReLU).
+These models are the primary substrate for the PRUNING / SCALING /
+QUANTIZATION strategy experiments (benchmarks/bench_pruning.py etc.).
+
+All are functional JAX like the LM zoo: ``init(key, scale)`` → params, with
+``scale`` the SCALING O-task's width multiplier.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Ctx, dense_init, linear
+
+
+# --------------------------------------------------------------- Jet-DNN
+JET_FEATURES = 16
+JET_CLASSES = 5
+JET_WIDTHS = (64, 32, 32)
+
+
+def init_jet_dnn(key, scale: float = 1.0, dtype=jnp.float32):
+    widths = [max(2, int(round(w * scale))) for w in JET_WIDTHS]
+    dims = [JET_FEATURES, *widths, JET_CLASSES]
+    ks = jax.random.split(key, len(dims) - 1)
+    params = {}
+    for i, (din, dout) in enumerate(zip(dims, dims[1:])):
+        params[f"fc{i}"] = {"w": dense_init(ks[i], din, dout, dtype),
+                            "b": jnp.zeros((dout,), dtype)}
+    return params
+
+
+def jet_dnn_apply(ctx: Ctx, params, x):
+    n = len(params)
+    for i in range(n):
+        p = params[f"fc{i}"]
+        x = linear(ctx, f"fc{i}", x, p["w"], p["b"])
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ------------------------------------------------------------------ conv
+def conv_init(key, k: int, cin: int, cout: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(k * k * cin)
+    return (jax.random.normal(key, (k, k, cin, cout), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def conv2d(x, w, stride: int = 1, padding: str = "SAME"):
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(x.dtype)
+
+
+def _bn_init(c: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def _bn(p, x, eps=1e-5):
+    # batch-independent norm (per-channel layernorm style) — keeps the
+    # model purely functional without running statistics.
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=(1, 2), keepdims=True)
+    var = jnp.var(xf, axis=(1, 2), keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ VGG7
+VGG7_CHANNELS = (64, 64, 128, 128, 256, 256)
+
+
+def init_vgg7(key, scale: float = 1.0, in_ch: int = 1, n_classes: int = 10,
+              img: int = 28, dtype=jnp.float32):
+    chans = [max(4, int(round(c * scale))) for c in VGG7_CHANNELS]
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+    cin = in_ch
+    for i, c in enumerate(chans):
+        params[f"conv{i}"] = {"w": conv_init(ks[i], 3, cin, c, dtype),
+                              "bn": _bn_init(c, dtype)}
+        cin = c
+    # three 2x pools over the six convs
+    feat = (img // 8) ** 2 * chans[-1]
+    params["fc"] = {"w": dense_init(ks[6], feat, n_classes, dtype),
+                    "b": jnp.zeros((n_classes,), dtype)}
+    return params
+
+
+def vgg7_apply(ctx: Ctx, params, x):
+    i = 0
+    while f"conv{i}" in params:
+        p = params[f"conv{i}"]
+        x = conv2d(x, p["w"])
+        x = _bn(p["bn"], x)
+        x = jax.nn.relu(x)
+        if i % 2 == 1:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                "VALID")
+        i += 1
+    x = x.reshape(x.shape[0], -1)
+    return linear(ctx, "fc", x, params["fc"]["w"], params["fc"]["b"])
+
+
+# --------------------------------------------------------------- ResNet9
+RES9_CHANNELS = (64, 128, 256, 512)
+
+
+def init_resnet9(key, scale: float = 1.0, in_ch: int = 3,
+                 n_classes: int = 10, dtype=jnp.float32):
+    chans = [max(4, int(round(c * scale))) for c in RES9_CHANNELS]
+    ks = jax.random.split(key, 12)
+    p: dict[str, Any] = {}
+    p["stem"] = {"w": conv_init(ks[0], 3, in_ch, chans[0], dtype),
+                 "bn": _bn_init(chans[0], dtype)}
+    p["c1"] = {"w": conv_init(ks[1], 3, chans[0], chans[1], dtype),
+               "bn": _bn_init(chans[1], dtype)}
+    p["r1a"] = {"w": conv_init(ks[2], 3, chans[1], chans[1], dtype),
+                "bn": _bn_init(chans[1], dtype)}
+    p["r1b"] = {"w": conv_init(ks[3], 3, chans[1], chans[1], dtype),
+                "bn": _bn_init(chans[1], dtype)}
+    p["c2"] = {"w": conv_init(ks[4], 3, chans[1], chans[2], dtype),
+               "bn": _bn_init(chans[2], dtype)}
+    p["c3"] = {"w": conv_init(ks[5], 3, chans[2], chans[3], dtype),
+               "bn": _bn_init(chans[3], dtype)}
+    p["r2a"] = {"w": conv_init(ks[6], 3, chans[3], chans[3], dtype),
+                "bn": _bn_init(chans[3], dtype)}
+    p["r2b"] = {"w": conv_init(ks[7], 3, chans[3], chans[3], dtype),
+                "bn": _bn_init(chans[3], dtype)}
+    p["fc"] = {"w": dense_init(ks[8], chans[3], n_classes, dtype),
+               "b": jnp.zeros((n_classes,), dtype)}
+    return p
+
+
+def _convbn(p, x, pool=False):
+    x = conv2d(x, p["w"])
+    x = _bn(p["bn"], x)
+    if pool:
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    return jax.nn.relu(x)
+
+
+def resnet9_apply(ctx: Ctx, params, x):
+    x = _convbn(params["stem"], x)
+    x = _convbn(params["c1"], x, pool=True)
+    r = _convbn(params["r1a"], x)
+    r = _convbn(params["r1b"], r)
+    x = x + r
+    x = _convbn(params["c2"], x, pool=True)
+    x = _convbn(params["c3"], x, pool=True)
+    r = _convbn(params["r2a"], x)
+    r = _convbn(params["r2b"], r)
+    x = x + r
+    x = jnp.max(x, axis=(1, 2))
+    return linear(ctx, "fc", x, params["fc"]["w"], params["fc"]["b"])
+
+
+# ------------------------------------------------------------- factories
+BENCH_MODELS = {
+    "jet_dnn": (init_jet_dnn, jet_dnn_apply,
+                dict(features=JET_FEATURES, classes=JET_CLASSES,
+                     input_shape=(JET_FEATURES,))),
+    "vgg7": (init_vgg7, vgg7_apply,
+             dict(classes=10, input_shape=(28, 28, 1))),
+    "resnet9": (init_resnet9, resnet9_apply,
+                dict(classes=10, input_shape=(32, 32, 3))),
+}
+
+
+def build_bench_model(name: str, key, scale: float = 1.0):
+    init_fn, apply_fn, meta = BENCH_MODELS[name]
+    params = init_fn(key, scale=scale)
+    return params, apply_fn, meta

@@ -1,0 +1,149 @@
+"""Optimizers in pure JAX (no optax in this environment — built from
+scratch per the framework scope): SGD, Adam, AdamW with fp32 accumulators,
+global-norm clipping, LR schedules.
+
+API mirrors the familiar (init, update) pair:
+
+    opt = adamw(lr=schedule, weight_decay=0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Optimizer state dtype is fp32 regardless of param dtype (mixed-precision
+training: bf16 params + fp32 moments).  ZeRO-1 sharding of the moments is
+applied by the caller through sharding rules (parallel/sharding.py) — the
+moment pytrees mirror params, so param logical axes + the fsdp rule apply
+directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int,
+                    total_steps: int, final_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(1, warmup_steps)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+    name: str = "optimizer"
+
+
+def sgd(lr: float | Schedule, momentum: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mom"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return state
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        if momentum:
+            mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mom"], grads)
+            updates = jax.tree.map(lambda m: -lr_t * m, mom)
+            return updates, {"step": step, "mom": mom}
+        updates = jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32),
+                               grads)
+        return updates, {"step": step}
+
+    return Optimizer(init, update, "sgd")
+
+
+def adamw(lr: float | Schedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * gf
+            v_new = b2 * v + (1 - b2) * gf * gf
+            mhat = m_new / c1
+            vhat = v_new / c2
+            u = -lr_t * mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and p is not None and p.ndim >= 2:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u, m_new, v_new
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params) if params is not None \
+            else [None] * len(flat_g)
+        out = [upd(g, m, v, p) for g, m, v, p
+               in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        m_new = treedef.unflatten([o[1] for o in out])
+        v_new = treedef.unflatten([o[2] for o in out])
+        return updates, {"step": step, "m": m_new, "v": v_new}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adam(lr: float | Schedule, **kw) -> Optimizer:
+    return adamw(lr, weight_decay=0.0, **kw)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def opt_state_axes(opt_name: str, param_axes):
+    """Logical axes for the optimizer state (moments mirror params)."""
+    if opt_name == "sgd":
+        return {"step": ()}
+    return {"step": (), "m": param_axes, "v": param_axes}

@@ -1,0 +1,172 @@
+"""Logical-axis sharding rules (MaxText-style), divisibility-checked.
+
+Every parameter / activation / cache tensor in the model substrate is
+annotated with a tuple of *logical* axis names (one per dimension, or None).
+A :class:`ShardingRules` maps logical names to mesh axis names; resolution
+checks divisibility and falls back to replication for axes that do not divide
+evenly (e.g. qwen2's 28 heads on a model=16 mesh axis), recording the
+fallback so EXPERIMENTS.md can report it.
+
+The SHARDING-SEARCH O-task mutates these rules (it is the TPU-specific
+platform knob MetaML automates; DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default logical → mesh mapping.  Entries may map to a tuple of mesh axes
+# (composed sharding, e.g. batch over (pod, data)).
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,             # sequence replicated by default (train/prefill)
+    "cache_seq": "model",    # decode KV caches shard sequence over model axis
+    "embed": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "experts": "model",
+    "expert_ffn": None,
+    "layers": None,
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv_k": None,
+    "kv_lora": None,
+    "q_lora": None,
+    "frames": None,
+    "fsdp": ("pod", "data"),  # ZeRO/FSDP axis for param+opt-state sharding
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    rules: dict[str, Any]
+    mesh: Mesh
+    # logical axes that, for this run, shard params over the fsdp axis too
+    fsdp_axes: tuple[str, ...] = ()
+    fallbacks: list[str] = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def default(cls, mesh: Mesh, overrides: dict[str, Any] | None = None,
+                fsdp_axes: tuple[str, ...] = ()) -> "ShardingRules":
+        rules = dict(DEFAULT_RULES)
+        if overrides:
+            rules.update(overrides)
+        return cls(rules=rules, mesh=mesh, fsdp_axes=fsdp_axes)
+
+    # ------------------------------------------------------------ resolve
+    def _mesh_axes_for(self, logical: str | None) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        target = self.rules.get(logical)
+        if target is None:
+            return ()
+        if isinstance(target, str):
+            return (target,)
+        return tuple(a for a in target if a is not None)
+
+    def _axis_size(self, mesh_axes: tuple[str, ...]) -> int:
+        size = 1
+        for a in mesh_axes:
+            size *= dict(zip(self.mesh.axis_names, self.mesh.devices.shape)
+                         )[a]
+        return size
+
+    def spec_for(self, logical_axes: tuple[str | None, ...],
+                 dims: tuple[int, ...] | None = None) -> P:
+        """PartitionSpec for a tensor with the given logical axes.
+
+        If ``dims`` is provided, divisibility is enforced: a logical axis
+        whose dim does not divide by the mesh-axis product is replicated and
+        the fallback recorded.  Mesh axes present in the rules but absent
+        from the actual mesh (e.g. "pod" on a single-pod mesh) are dropped.
+        """
+        entries = []
+        used: set[str] = set()
+        for i, la in enumerate(logical_axes):
+            axes = tuple(a for a in self._mesh_axes_for(la)
+                         if a in self.mesh.axis_names and a not in used)
+            if not axes:
+                entries.append(None)
+                continue
+            if dims is not None:
+                size = self._axis_size(axes)
+                if dims[i] % size != 0:
+                    self.fallbacks.append(
+                        f"{la}:dim{dims[i]}%{size}!=0->replicated")
+                    entries.append(None)
+                    continue
+            used.update(axes)
+            entries.append(axes[0] if len(axes) == 1 else axes)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding_for(self, logical_axes: tuple[str | None, ...],
+                     dims: tuple[int, ...] | None = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical_axes, dims))
+
+    # -------------------------------------------------------- tree helpers
+    def tree_specs(self, axes_tree, shape_tree=None):
+        """Map a pytree of logical-axis tuples (+optionally shapes) to specs.
+
+        ``axes_tree`` leaves are tuples of logical names; ``shape_tree``
+        (same treedef, leaves with ``.shape``) enables divisibility checks.
+        """
+        if shape_tree is None:
+            return jax.tree.map(
+                lambda ax: self.spec_for(tuple(ax)), axes_tree,
+                is_leaf=lambda x: isinstance(x, tuple))
+        return jax.tree.map(
+            lambda ax, s: self.spec_for(tuple(ax), tuple(s.shape)),
+            axes_tree, shape_tree,
+            is_leaf=lambda x: isinstance(x, tuple))
+
+    def tree_shardings(self, axes_tree, shape_tree=None):
+        specs = self.tree_specs(axes_tree, shape_tree)
+        return jax.tree.map(lambda sp: NamedSharding(self.mesh, sp), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def param_specs(self, axes_tree, shape_tree=None, fsdp: bool = False):
+        """Param specs; optionally add FSDP sharding on the largest
+        replicated dim of each big tensor (ZeRO-3-style weight sharding)."""
+        specs = self.tree_specs(axes_tree, shape_tree)
+        if not fsdp or shape_tree is None:
+            return specs
+        fsdp_axes = tuple(a for a in ("pod", "data")
+                          if a in self.mesh.axis_names)
+        if not fsdp_axes:
+            return specs
+        fsdp_size = self._axis_size(fsdp_axes)
+
+        def add_fsdp(spec: P, shape):
+            dims = tuple(shape.shape)
+            if int(np.prod(dims)) < (1 << 20):  # leave small tensors alone
+                return spec
+            entries = list(spec) + [None] * (len(dims) - len(spec))
+            # pick the largest dim not already sharded that divides evenly
+            order = sorted(range(len(dims)), key=lambda i: -dims[i])
+            for i in order:
+                if entries[i] is None and dims[i] % fsdp_size == 0:
+                    entries[i] = fsdp_axes if len(fsdp_axes) > 1 \
+                        else fsdp_axes[0]
+                    break
+            while entries and entries[-1] is None:
+                entries.pop()
+            return P(*entries)
+
+        return jax.tree.map(add_fsdp, specs, shape_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(rules: ShardingRules, ndim: int = 2) -> P:
+    """Spec for (batch, seq, ...) data tensors."""
+    return rules.spec_for(("batch",) + (None,) * (ndim - 1))

@@ -1,0 +1,120 @@
+"""Per-layer mixed-precision policies (QUANTIZATION O-task substrate).
+
+Paper §V-B: the QUANTIZATION O-task "operates at the HLS C++ level, providing
+more direct control over hardware optimizations ... The resulting precision
+configuration is directly instrumented into the C++ kernel."
+
+TPU adaptation (DESIGN.md §2): there is no arbitrary-width datapath on a TPU;
+the MXU natively supports bf16 / int8 / fp8.  A *policy* maps layer-name
+patterns to precision levels on that lattice, and the model's ``linear``
+primitive (models/layers.py) dispatches on the matched level — injecting the
+policy into the computation right before lowering, the TPU-idiomatic
+equivalent of rewriting the generated C++ source.
+
+Levels (most → least precise): fp32 > bf16 > fp8 > int8.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+FP32 = "fp32"
+BF16 = "bf16"
+FP8 = "fp8"      # float8_e4m3
+INT8 = "int8"
+
+# Lattice ordered most → least precise (greedy_lattice_descent walks down it).
+LEVELS = (FP32, BF16, FP8, INT8)
+
+# Bytes per weight at each level — the LUT/BRAM-analogue resource metric.
+LEVEL_BYTES = {FP32: 4.0, BF16: 2.0, FP8: 1.0, INT8: 1.0}
+
+_DTYPES = {
+    FP32: jnp.float32,
+    BF16: jnp.bfloat16,
+    FP8: jnp.dtype(ml_dtypes.float8_e4m3fn),
+    INT8: jnp.int8,
+}
+
+
+class PrecisionPolicy:
+    """Ordered pattern→level map with an exemption list.
+
+    Patterns are ``fnmatch`` globs matched against hierarchical layer names
+    (e.g. ``layers/attn/wq``, ``layers/moe/experts/w_up``).  First match wins;
+    unmatched names use ``default``.  ``exempt`` patterns always stay at the
+    default level (router/gate weights etc., DESIGN.md §4).
+    """
+
+    def __init__(self, default: str = BF16,
+                 rules: list[tuple[str, str]] | None = None,
+                 exempt: list[str] | None = None):
+        assert default in LEVELS
+        self.default = default
+        self.rules: list[tuple[str, str]] = list(rules or [])
+        self.exempt: list[str] = list(exempt or [])
+
+    def copy(self) -> "PrecisionPolicy":
+        return PrecisionPolicy(self.default, list(self.rules),
+                               list(self.exempt))
+
+    def with_rule(self, pattern: str, level: str) -> "PrecisionPolicy":
+        p = self.copy()
+        # prepend so newer (more specific, search-driven) rules win
+        p.rules.insert(0, (pattern, level))
+        return p
+
+    def level_for(self, name: str) -> str:
+        for pat in self.exempt:
+            if fnmatch.fnmatch(name, pat):
+                return self.default
+        for pat, level in self.rules:
+            if fnmatch.fnmatch(name, pat):
+                return level
+        return self.default
+
+    def as_dict(self) -> dict:
+        return {"default": self.default, "rules": list(self.rules),
+                "exempt": list(self.exempt)}
+
+    def __repr__(self) -> str:
+        return f"PrecisionPolicy({self.as_dict()})"
+
+
+def quantize_int8(w: jnp.ndarray, axis: int = 0
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-output-channel int8 quantization of a weight matrix.
+
+    ``axis`` is the *contraction* axis (reduced over), so scales are
+    per-output-channel.  Returns (int8 weights, fp32 scales).
+    """
+    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def fake_quant_int8(w: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Quantize→dequantize (straight-through estimator for training)."""
+    q, scale = quantize_int8(w, axis)
+    deq = q.astype(jnp.float32) * scale
+    # STE: forward uses deq, gradient flows to w unchanged.
+    return w + jax.lax.stop_gradient(deq - w.astype(jnp.float32)).astype(w.dtype)
+
+
+def cast_level(w: jnp.ndarray, level: str) -> jnp.ndarray:
+    """Round-trip a weight through the storage dtype of ``level``."""
+    if level == INT8:
+        q, scale = quantize_int8(w, axis=0)
+        return (q.astype(jnp.float32) * scale).astype(w.dtype)
+    dt = _DTYPES[level]
+    return w.astype(dt).astype(w.dtype)
+
+
+def weight_bytes(shape: tuple[int, ...], level: str) -> float:
+    return float(np.prod(shape)) * LEVEL_BYTES[level]

@@ -1,0 +1,170 @@
+"""Pruning masks (PRUNING O-task substrate).
+
+Paper §V-B: the PRUNING O-task "gradually zeroes out weights during training
+to create a more compact and efficient network while maintaining accuracy",
+with auto-pruning maximizing the rate subject to ``accuracy_loss <= alpha_p``.
+
+TPU adaptation (DESIGN.md §2): on a fully-unrolled FPGA design a zero weight
+deletes a DSP; on a TPU only *structured* zeros buy anything.  We support two
+granularities:
+
+- ``unstructured``: classic magnitude pruning (reproduces the paper's
+  accuracy/rate curves; resource proxy counts effective MACs).
+- ``block``: 128x128-block magnitude pruning (MXU tile granularity); zero
+  blocks are skipped by the block-sparse Pallas kernel, so the compute-term
+  saving is structural, not cosmetic.
+
+Masks are pytrees parallel to (a subset of) the param pytree, {path: 0/1
+array}.  The polynomial schedule mirrors the Keras pruning API the paper
+uses (gradually ramping sparsity during fine-tuning).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 128  # MXU tile edge
+
+
+def magnitude_mask(w: jnp.ndarray, rate: float) -> jnp.ndarray:
+    """Unstructured magnitude mask keeping the top (1-rate) fraction."""
+    if rate <= 0.0:
+        return jnp.ones_like(w, dtype=jnp.float32)
+    flat = jnp.abs(w).astype(jnp.float32).reshape(-1)
+    k = int(round((1.0 - rate) * flat.size))
+    if k <= 0:
+        return jnp.zeros_like(w, dtype=jnp.float32)
+    thresh = jnp.sort(flat)[flat.size - k]
+    return (jnp.abs(w).astype(jnp.float32) >= thresh).astype(jnp.float32)
+
+
+def block_mask(w: jnp.ndarray, rate: float, block: int = BLOCK
+               ) -> jnp.ndarray:
+    """Block-granular magnitude mask for a 2-D weight.
+
+    Blocks are scored by their L1 norm; the lowest-norm ``rate`` fraction of
+    blocks is zeroed.  The returned mask is full-resolution (same shape as
+    ``w``) so it can also be consumed by the dense masked path; the
+    block-sparse kernel re-derives the block map from it.
+    """
+    assert w.ndim == 2, "block masks are for 2-D weights"
+    m, n = w.shape
+    bm, bn = -(-m // block), -(-n // block)
+    pad = jnp.zeros((bm * block, bn * block), w.dtype).at[:m, :n].set(w)
+    blocks = pad.reshape(bm, block, bn, block)
+    scores = jnp.sum(jnp.abs(blocks.astype(jnp.float32)), axis=(1, 3))
+    flat = scores.reshape(-1)
+    k = int(round((1.0 - rate) * flat.size))
+    if k <= 0:
+        return jnp.zeros((m, n), jnp.float32)
+    thresh = jnp.sort(flat)[flat.size - k]
+    bmask = (scores >= thresh).astype(jnp.float32)  # (bm, bn)
+    full = jnp.repeat(jnp.repeat(bmask, block, axis=0), block, axis=1)
+    return full[:m, :n]
+
+
+def block_map(mask: jnp.ndarray, block: int = BLOCK) -> np.ndarray:
+    """(bm, bn) 0/1 block occupancy map from a full-resolution mask."""
+    m, n = mask.shape
+    bm, bn = -(-m // block), -(-n // block)
+    pad = np.zeros((bm * block, bn * block), np.float32)
+    pad[:m, :n] = np.abs(np.asarray(mask, np.float32))
+    return (pad.reshape(bm, block, bn, block).sum(axis=(1, 3)) > 0
+            ).astype(np.int32)
+
+
+def polynomial_schedule(step: int, begin: int, end: int,
+                        final_rate: float, power: float = 3.0) -> float:
+    """Keras-style polynomial-decay sparsity ramp (0 → final_rate)."""
+    if step <= begin:
+        return 0.0
+    if step >= end:
+        return final_rate
+    frac = (step - begin) / max(1, end - begin)
+    return final_rate * (1.0 - (1.0 - frac) ** power)
+
+
+def prunable_paths(params, min_size: int = 1024,
+                   exempt: tuple[str, ...] = ("embed", "router", "norm",
+                                              "bias", "scale", "gate_logit",
+                                              "dt_", "A_log")) -> list[str]:
+    """Paths of 2-D weights worth pruning (skips tiny/exempt tensors)."""
+    flat = flatten_params(params)
+    out = []
+    for path, leaf in flat.items():
+        if leaf.ndim != 2 or leaf.size < min_size:
+            continue
+        if any(tok in path for tok in exempt):
+            continue
+        out.append(path)
+    return sorted(out)
+
+
+def build_masks(params, rate: float, granularity: str = "block",
+                paths: list[str] | None = None,
+                block: int = BLOCK) -> dict[str, jnp.ndarray]:
+    """{path: mask} for the selected (or all prunable) paths."""
+    flat = flatten_params(params)
+    paths = paths if paths is not None else prunable_paths(params)
+    fn = block_mask if granularity == "block" else (
+        lambda w, r: magnitude_mask(w, r))
+    masks = {}
+    for p in paths:
+        w = flat[p]
+        masks[p] = fn(w, rate) if granularity != "block" else block_mask(
+            w, rate, block)
+    return masks
+
+
+def apply_masks(params, masks: dict[str, jnp.ndarray]):
+    """Multiply masked weights into a new param pytree."""
+    flat = flatten_params(params)
+    for p, m in masks.items():
+        flat[p] = (flat[p].astype(jnp.float32) * m).astype(flat[p].dtype)
+    return unflatten_params(flat)
+
+
+def sparsity_report(masks: dict[str, jnp.ndarray]) -> dict[str, float]:
+    total = sum(int(m.size) for m in masks.values())
+    zeros = sum(int(m.size) - int(jnp.sum(m)) for m in masks.values())
+    return {"masked_params": total, "zeros": zeros,
+            "sparsity": zeros / max(1, total)}
+
+
+# --------------------------------------------------------- pytree helpers
+def flatten_params(params) -> dict[str, jnp.ndarray]:
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(f"{prefix}/{k}" if prefix else k, v)
+        else:
+            flat[prefix] = node
+
+    rec("", params)
+    return flat
+
+
+def unflatten_params(flat: dict[str, jnp.ndarray]):
+    root: dict = {}
+    for path, leaf in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return root
+
+
+def effective_macs_fraction(masks: dict[str, jnp.ndarray],
+                            params) -> float:
+    """Fraction of matmul MACs surviving pruning — the DSP-usage analogue."""
+    flat = flatten_params(params)
+    total = sum(int(flat[p].size) for p in masks)
+    if total == 0:
+        return 1.0
+    alive = sum(float(jnp.sum(m)) for m in masks.values())
+    return alive / total

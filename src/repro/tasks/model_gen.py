@@ -1,0 +1,104 @@
+"""MODEL-GEN λ-task (paper Table I: KERAS-MODEL-GEN, multiplicity 0-to-1).
+
+Builds a model (bench CNN/MLP or LM arch), optionally trains it on the
+configured dataset, and places the DNN-level artifact into the model space
+with baseline accuracy + resource metrics.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.metamodel import LEVEL_DNN, MetaModel
+from repro.core.task import LambdaTask
+from repro.data import synthetic
+from repro.models.api import DEFAULT_EXEMPT, build_model
+from repro.models.cnn import BENCH_MODELS
+from repro.quant.policy import FP32, PrecisionPolicy
+from repro.tasks.handle import DNNHandle
+from repro.tasks.train_utils import train_classifier
+
+BENCH_DATASETS = {"jet_dnn": "jet", "vgg7": "mnist_like",
+                  "resnet9": "svhn_like"}
+
+
+class ModelGen(LambdaTask):
+    n_in = 0
+    n_out = 1
+    defaults = {
+        "model": "jet_dnn",         # bench name or LM arch id
+        "train_en": True,
+        "train_epochs": 5,
+        "train_samples": 3072,
+        "batch": 128,
+        "lr": 3e-3,
+        "seed": 0,
+        "smoke": False,             # LM archs: reduced config
+        "scale": 1.0,
+    }
+
+    def execute(self, meta: MetaModel, inputs):
+        name = self.param(meta, "model")
+        seed = self.param(meta, "seed")
+        key = jax.random.PRNGKey(seed)
+        if name in BENCH_MODELS:
+            handle = self._build_bench(meta, name, key)
+        else:
+            handle = self._build_lm(meta, name, key)
+        acc = handle.evaluate()
+        metrics = {"accuracy": acc, **handle.summary_metrics()}
+        out = meta.add_model(name, LEVEL_DNN, handle, metrics=metrics)
+        meta.record("model_gen", model=name, accuracy=acc)
+        return [out]
+
+    def _build_bench(self, meta, name, key) -> DNNHandle:
+        init_fn, apply_fn, info = BENCH_MODELS[name]
+        scale = self.param(meta, "scale")
+        params = init_fn(key, scale=scale)
+        ds_fn = synthetic.DATASETS[BENCH_DATASETS[name]]
+        n = self.param(meta, "train_samples")
+        x, y = ds_fn(n, seed=self.param(meta, "seed"))
+        (xtr, ytr), (xte, yte) = synthetic.train_test_split(x, y)
+        handle = DNNHandle(
+            kind="bench", name=name, params=params, apply_fn=apply_fn,
+            meta=dict(info), scale=scale,
+            policy=PrecisionPolicy(default=FP32, exempt=DEFAULT_EXEMPT),
+            train_data=(xtr, ytr), test_data=(xte, yte))
+        if self.param(meta, "train_en"):
+            params, losses = train_classifier(
+                params, apply_fn, (xtr, ytr),
+                epochs=self.param(meta, "train_epochs"),
+                batch=self.param(meta, "batch"),
+                lr=self.param(meta, "lr"),
+                seed=self.param(meta, "seed"))
+            handle = handle.child(params=params)
+            meta.record("model_gen.train", model=name,
+                        final_loss=losses[-1] if losses else None)
+        return handle
+
+    def _build_lm(self, meta, arch, key) -> DNNHandle:
+        from repro.configs.registry import get_config
+        cfg = get_config(arch, smoke=self.param(meta, "smoke"))
+        model = build_model(cfg)
+        params = model.init(key)
+        # synthetic eval batch for next-token accuracy
+        toks = synthetic.lm_tokens(8 * 128 + 1, cfg.vocab_size,
+                                   seed=self.param(meta, "seed"))
+        data = {"tokens": toks[:-1].reshape(8, 128),
+                "labels": toks[1:].reshape(8, 128)}
+        handle = DNNHandle(kind="lm", name=arch, params=params, model=model,
+                           policy=model.policy, test_data=data,
+                           train_data=data)
+        if self.param(meta, "train_en"):
+            from repro.tasks.train_utils import lm_finetune
+
+            def batches(s):
+                t = synthetic.lm_tokens(4 * 64 + 1, cfg.vocab_size, seed=s)
+                return {"tokens": t[:-1].reshape(4, 64),
+                        "labels": t[1:].reshape(4, 64)}
+
+            params, _ = lm_finetune(model, params, batches,
+                                    steps=self.param(meta, "train_epochs"))
+            handle = handle.child(params=params)
+        return handle

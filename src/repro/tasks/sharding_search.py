@@ -1,0 +1,108 @@
+"""SHARDING-SEARCH O-task — the TPU-platform-specific optimization knob.
+
+No FPGA analogue exists (DESIGN.md §2): on TPU the expert-tuned knob is the
+parallelism layout.  This O-task automates it exactly the way PRUNING
+automates the sparsity knob: enumerate candidate configurations (remat
+policy, microbatching, cache-sequence sharding axis, FSDP on/off), lower +
+compile each, and keep the one minimizing the roofline bound.  Greedy
+coordinate descent — each knob is tried against the incumbent.
+
+objective:  minimize   max(compute_s, memory_s, collective_s)
+constraint: fits HBM (peak bytes/chip <= 16 GB)
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import SHAPES
+from repro.core.metamodel import LEVEL_DNN, MetaModel
+from repro.core.task import OTask, TaskError
+from repro.launch.roofline import HW, roofline
+
+
+class ShardingSearch(OTask):
+    n_in = 1
+    n_out = 1
+    defaults = {
+        "shape": "train_4k",
+        "multi_pod": False,
+        "knobs": None,          # {name: [candidates]} override
+        "require_fit": True,
+        "verbose": True,
+    }
+
+    BASE = {"remat": None, "microbatches": 1, "cache_seq_axis": None,
+            "fsdp": None}
+    TRAIN_KNOBS = {
+        "remat": ["dots", "full", "none"],
+        "microbatches": [1, 2, 4],
+        "fsdp": [None, True],
+    }
+    DECODE_KNOBS = {
+        "cache_seq_axis": [None, "model", "data"],
+    }
+
+    def execute(self, meta: MetaModel, inputs):
+        from repro.launch.dryrun import _cell_model_flops, lower_cell
+        art = meta.model(inputs[0])
+        if art.level != LEVEL_DNN or art.payload.kind != "lm":
+            raise TaskError("ShardingSearch expects an LM DNN artifact")
+        handle = art.payload
+        shape = SHAPES[self.param(meta, "shape")]
+        multi_pod = self.param(meta, "multi_pod")
+        knobs = self.param(meta, "knobs")
+        if knobs is None:
+            knobs = dict(self.TRAIN_KNOBS if shape.kind == "train"
+                         else self.DECODE_KNOBS)
+        verbose = self.param(meta, "verbose")
+        require_fit = self.param(meta, "require_fit")
+        mf = _cell_model_flops(handle.name, shape)
+
+        def measure(cfg_kw: dict) -> dict:
+            lowered, mesh, model, aux = lower_cell(
+                handle.name, shape, multi_pod=multi_pod, **cfg_kw)
+            compiled = lowered.compile()
+            r = roofline(compiled, mesh, model_flops=mf)
+            meta.record("sharding_search.probe", config=dict(cfg_kw),
+                        bound_s=r["bound_s"], dominant=r["dominant"],
+                        fits=r.get("fits_hbm"))
+            if verbose:
+                print(f"  probe {cfg_kw}: bound={r['bound_s']*1e3:.2f}ms "
+                      f"dom={r['dominant']} fits={r.get('fits_hbm')}")
+            return r
+
+        def score(r: dict) -> float:
+            s = r["bound_s"]
+            if require_fit and r.get("fits_hbm") is False:
+                peak = r["memory"].get("peak_bytes", 0)
+                s += 10.0 * max(0.0, peak / HW["hbm_bytes"] - 1.0)
+            return s
+
+        incumbent = dict(self.BASE)
+        best_r = measure(incumbent)
+        trace = [{"config": dict(incumbent), "roofline": best_r}]
+        for knob, candidates in knobs.items():
+            for cand in candidates:
+                if cand == incumbent.get(knob):
+                    continue
+                trial = dict(incumbent, **{knob: cand})
+                try:
+                    r = measure(trial)
+                except Exception as e:  # noqa: BLE001
+                    meta.record("sharding_search.error",
+                                config=trial, error=repr(e))
+                    continue
+                trace.append({"config": dict(trial), "roofline": r})
+                if score(r) < score(best_r):
+                    incumbent, best_r = trial, r
+        metrics = {"best_config": incumbent,
+                   "bound_s": best_r["bound_s"],
+                   "dominant": best_r["dominant"],
+                   "n_probes": len(trace)}
+        out_handle = handle.child(
+            meta=dict(handle.meta, sharding_config=incumbent))
+        out = meta.add_model(f"{handle.name}+Sh", LEVEL_DNN, out_handle,
+                             parent=inputs[0],
+                             metrics={**art.metrics, **metrics})
+        meta.set("sharding_search.result",
+                 {"best": incumbent, "roofline": best_r, "trace": trace})
+        return [out]

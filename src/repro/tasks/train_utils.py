@@ -1,0 +1,97 @@
+"""Small training loops used inside O-tasks (fine-tune under masks,
+retrain after scaling) — pure JAX, jit-compiled per (model, mask) combo."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import Ctx
+from repro.optim.optimizers import adamw, apply_updates, clip_by_global_norm
+from repro.sparsity.masks import apply_masks
+
+
+def softmax_xent(logits, labels):
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def train_classifier(params, apply_fn: Callable, train_data, *,
+                     epochs: int = 3, batch: int = 128, lr: float = 3e-3,
+                     masks: dict | None = None,
+                     policy=None, seed: int = 0,
+                     mask_schedule: Callable[[int], dict] | None = None):
+    """Train/fine-tune a classifier.  ``masks`` are re-applied after every
+    update (projected masked training — the Keras pruning recipe the paper
+    uses).  ``mask_schedule(step)`` overrides masks per step for gradual
+    sparsity ramps."""
+    x, y = train_data
+    n = len(x)
+    steps_per_epoch = max(1, n // batch)
+    opt = adamw(lr, weight_decay=1e-4)
+    opt_state = opt.init(params)
+    ctx = Ctx(policy=policy)
+
+    @jax.jit
+    def step_fn(params, opt_state, xb, yb, cur_masks):
+        def loss_fn(p):
+            if cur_masks is not None:
+                p = apply_masks(p, cur_masks)
+            return softmax_xent(apply_fn(ctx, p, xb), yb)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        if cur_masks is not None:
+            params = apply_masks(params, cur_masks)
+        return params, opt_state, loss
+
+    rng = np.random.default_rng(seed)
+    losses = []
+    global_step = 0
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(steps_per_epoch):
+            idx = perm[i * batch:(i + 1) * batch]
+            cur = mask_schedule(global_step) if mask_schedule else masks
+            params, opt_state, loss = step_fn(
+                params, opt_state, jnp.asarray(x[idx]), jnp.asarray(y[idx]),
+                cur)
+            losses.append(float(loss))
+            global_step += 1
+    return params, losses
+
+
+def lm_finetune(model, params, token_batches, *, steps: int = 20,
+                lr: float = 1e-3, masks: dict | None = None):
+    """Brief LM fine-tune under masks (used by O-tasks on LM archs)."""
+    opt = adamw(lr)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        def loss_fn(p):
+            if masks is not None:
+                p = apply_masks(p, masks)
+            loss, _ = model.loss(p, batch)
+            return loss
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        if masks is not None:
+            params = apply_masks(params, masks)
+        return params, opt_state, loss
+
+    losses = []
+    for s in range(steps):
+        batch = token_batches(s)
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        losses.append(float(loss))
+    return params, losses

@@ -1,0 +1,177 @@
+"""Core MetaML framework: meta-model, pipe tasks, flow executor, search."""
+
+import math
+
+import pytest
+
+from repro.core.flow import DesignFlow, FlowError
+from repro.core.metamodel import LEVEL_DNN, MetaModel, ModelArtifact
+from repro.core.search import (binary_search_max, greedy_lattice_descent,
+                               monotone_shrink_search)
+from repro.core.task import LambdaTask, OTask, TaskError
+
+
+class Gen(LambdaTask):
+    n_in, n_out = 0, 1
+    defaults = {"value": 1}
+
+    def execute(self, meta, inputs):
+        return [meta.add_model("gen", LEVEL_DNN,
+                               {"v": self.param(meta, "value")})]
+
+
+class Inc(OTask):
+    n_in, n_out = 1, 1
+    defaults = {"by": 1}
+
+    def execute(self, meta, inputs):
+        v = meta.model(inputs[0]).payload["v"]
+        return [meta.add_model("inc", LEVEL_DNN,
+                               {"v": v + self.param(meta, "by")},
+                               parent=inputs[0])]
+
+
+# ------------------------------------------------------------- MetaModel
+class TestMetaModel:
+    def test_cfg_store(self):
+        m = MetaModel({"a": 1})
+        m.set("b", 2)
+        assert m.get("a") == 1 and m.get("b") == 2
+        assert m.get("missing", 42) == 42
+
+    def test_model_space_and_lineage(self):
+        m = MetaModel()
+        a = m.add_model("root", LEVEL_DNN, {})
+        b = m.add_model("child", LEVEL_DNN, {}, parent=a)
+        c = m.add_model("grand", LEVEL_DNN, {}, parent=b)
+        assert m.lineage(c) == [c, b, a]
+        assert a in m and "nope" not in m
+
+    def test_latest_and_levels(self):
+        m = MetaModel()
+        m.add_model("x", "dnn", {})
+        n2 = m.add_model("y", "lowered", {})
+        assert m.latest("lowered").name == n2
+        assert len(list(m.models("dnn"))) == 1
+
+    def test_log_trace(self):
+        m = MetaModel()
+        m.record("task.start", task="t")
+        m.record("other", x=1)
+        assert len(m.trace("task.")) == 1
+
+
+# ------------------------------------------------------------ pipe tasks
+class TestPipeTasks:
+    def test_param_priority_cfg_over_instance_over_default(self):
+        t = Inc(by=5)
+        meta = MetaModel()
+        assert t.param(meta, "by") == 5
+        meta.set("Inc.by", 9)
+        assert t.param(meta, "by") == 9
+        assert Inc().param(MetaModel(), "by") == 1
+
+    def test_unknown_param_rejected(self):
+        with pytest.raises(TaskError):
+            Inc(nope=1)
+
+    def test_multiplicity_enforced(self):
+        meta = MetaModel()
+        with pytest.raises(TaskError):
+            Inc().run(meta, [])
+
+
+# ------------------------------------------------------------------ flow
+class TestFlow:
+    def test_linear_flow(self):
+        flow = DesignFlow("t")
+        flow.chain(Gen(value=10), Inc(by=2), Inc(by=3))
+        meta = flow.execute()
+        assert meta.latest().payload["v"] == 15
+
+    def test_validate_rejects_dangling_input(self):
+        flow = DesignFlow("bad")
+        flow.add(Inc())          # 1 input declared, 0 edges
+        with pytest.raises(FlowError):
+            flow.execute()
+
+    def test_cycle_with_condition_terminates(self):
+        # Gen -> Inc -> (back to Inc while v < 5)
+        flow = DesignFlow("loop")
+        g = flow.add(Gen(value=0))
+        i = flow.add(Inc(by=1))
+        flow.connect(g, i)
+        flow.connect(i, i, condition=lambda meta, outs:
+                     meta.model(outs[0]).payload["v"] < 5)
+        meta = flow.execute()
+        assert meta.latest().payload["v"] == 5
+
+    def test_unbounded_cycle_raises(self):
+        flow = DesignFlow("inf")
+        g = flow.add(Gen())
+        i = flow.add(Inc())
+        flow.connect(g, i)
+        flow.connect(i, i)  # no condition: infinite
+        with pytest.raises(FlowError):
+            flow.execute(max_steps=20)
+
+    def test_to_dot(self):
+        flow = DesignFlow("viz")
+        flow.chain(Gen(), Inc())
+        dot = flow.to_dot()
+        assert "digraph" in dot and "Gen" in dot and "Inc" in dot
+
+    def test_flow_records_trace(self):
+        flow = DesignFlow("tr")
+        flow.chain(Gen(), Inc())
+        meta = flow.execute()
+        events = [e["event"] for e in meta.log]
+        assert "flow.start" in events and "flow.done" in events
+        assert events.count("task.done") == 2
+
+
+# ---------------------------------------------------------------- search
+class TestSearch:
+    def test_binary_search_finds_boundary(self):
+        # feasible iff x <= 0.7
+        def f(x):
+            return x <= 0.7, x, {}
+        res = binary_search_max(f, beta=0.01)
+        assert abs(res.best_x - 0.7) <= 0.01
+
+    def test_binary_search_step_count(self):
+        # paper: 1 + log2(1/beta) bisection steps (+1 for the hi probe)
+        def f(x):
+            return x <= 0.5, x, {}
+        beta = 0.02
+        res = binary_search_max(f, beta=beta)
+        expected_bisect = math.ceil(math.log2(1 / beta))
+        assert res.n_steps <= 2 + expected_bisect + 1
+
+    def test_binary_search_all_feasible_early_exit(self):
+        res = binary_search_max(lambda x: (True, x, {}), beta=0.02)
+        assert res.best_x == 1.0 and res.n_steps == 2
+
+    def test_binary_search_none_feasible(self):
+        res = binary_search_max(lambda x: (x <= 0.0, x, {}), beta=0.1)
+        assert res.best_x == 0.0
+
+    def test_monotone_shrink_stops_at_first_infeasible(self):
+        cands = [0.7, 0.5, 0.35, 0.25]
+        calls = []
+
+        def f(x):
+            calls.append(x)
+            return x >= 0.4, -x, {}
+        res = monotone_shrink_search(cands, f)
+        assert res.best_x == 0.5
+        assert calls == [0.7, 0.5, 0.35]  # stopped at first infeasible
+
+    def test_greedy_lattice(self):
+        # items may descend to "mid" but not "low"
+        def accept(assign):
+            ok = all(v != "low" for v in assign.values())
+            return ok, 0.0, {}
+        assign, res = greedy_lattice_descent(
+            ["a", "b"], ["high", "mid", "low"], accept, "high", passes=3)
+        assert assign == {"a": "mid", "b": "mid"}

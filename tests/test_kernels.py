@@ -1,0 +1,145 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps, interpret=True."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.block_sparse_matmul import (block_sparse_matmul,
+                                               compact_block_index)
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quant_matmul import quant_matmul
+from repro.sparsity.masks import block_map, block_mask
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestQuantMatmul:
+    @pytest.mark.parametrize("m,k,n", [(128, 512, 128), (256, 1024, 256),
+                                       (128, 512, 384)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, m, k, n, dtype):
+        x = jax.random.normal(KEY, (m, k)).astype(dtype)
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n)).astype(dtype)
+        y = quant_matmul(x, w, interpret=True)
+        r = ref.quant_matmul_ref(x, w)
+        # bf16 inputs: XLA fusion differences flip occasional .5-rounding
+        # boundaries in x/scale — allow one quantization LSB of slack
+        atol = 1e-3 if dtype == jnp.float32 else 0.5
+        np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                                   rtol=1e-4 if dtype == jnp.float32
+                                   else 1e-2, atol=atol)
+
+    def test_close_to_exact_matmul(self):
+        x = jax.random.normal(KEY, (128, 512))
+        w = jax.random.normal(jax.random.PRNGKey(1), (512, 128))
+        y = quant_matmul(x, w, interpret=True)
+        exact = x @ w
+        rel = float(jnp.max(jnp.abs(y - exact))
+                    / jnp.max(jnp.abs(exact)))
+        assert rel < 0.05  # int8 path stays within quantization noise
+
+    def test_small_m_adapts_tile(self):
+        # m < BM: the tile shrinks to m and still matches the oracle
+        x = jax.random.normal(KEY, (64, 512))
+        w = jax.random.normal(jax.random.PRNGKey(1), (512, 128))
+        y = quant_matmul(x, w, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(ref.quant_matmul_ref(x, w)),
+            rtol=1e-4, atol=1e-3)
+
+    def test_non_tileable_raises(self):
+        x = jax.random.normal(KEY, (130, 512))  # 130 % 128 != 0
+        w = jax.random.normal(KEY, (512, 128))
+        with pytest.raises(AssertionError):
+            quant_matmul(x, w, interpret=True)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("sq,skv", [(128, 128), (256, 256), (130, 256),
+                                        (256, 100)])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, sq, skv, causal):
+        if causal and sq != skv:
+            pytest.skip("causal requires aligned positions here")
+        b, h, d = 2, 4, 64
+        q = jax.random.normal(KEY, (b, sq, h, d))
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, skv, h, d))
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, skv, h, d))
+        y = flash_attention(q, k, v, causal=causal, interpret=True)
+        r = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                                   rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("kv_heads", [1, 2, 4])
+    def test_gqa(self, kv_heads):
+        b, s, h, d = 1, 128, 4, 32
+        q = jax.random.normal(KEY, (b, s, h, d))
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv_heads, d))
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv_heads, d))
+        y = flash_attention(q, k, v, causal=True, interpret=True)
+        r = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                                   rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("window", [32, 128])
+    def test_sliding_window(self, window):
+        b, s, h, d = 1, 256, 2, 32
+        q = jax.random.normal(KEY, (b, s, h, d))
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, d))
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d))
+        y = flash_attention(q, k, v, causal=True, window=window,
+                            interpret=True)
+        r = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                                   rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        b, s, h, d = 1, 128, 2, 64
+        q = jax.random.normal(KEY, (b, s, h, d)).astype(dtype)
+        k = jax.random.normal(jax.random.PRNGKey(1),
+                              (b, s, h, d)).astype(dtype)
+        v = jax.random.normal(jax.random.PRNGKey(2),
+                              (b, s, h, d)).astype(dtype)
+        y = flash_attention(q, k, v, causal=True, interpret=True)
+        assert y.dtype == dtype
+        r = ref.flash_attention_ref(q, k, v, causal=True)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(r, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+class TestBlockSparseMatmul:
+    @pytest.mark.parametrize("rate", [0.0, 0.25, 0.5, 0.75])
+    def test_matches_dense_over_masked(self, rate):
+        m, k, n = 256, 512, 384
+        x = jax.random.normal(KEY, (m, k))
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+        mask = block_mask(w, rate=rate, block=128)
+        wm = w * mask
+        kidx = jnp.asarray(compact_block_index(
+            block_map(np.asarray(mask), 128)))
+        y = block_sparse_matmul(x, wm, kidx, interpret=True)
+        r = ref.block_sparse_matmul_ref(x, wm)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_trip_count_shrinks_with_sparsity(self):
+        k, n = 512, 512
+        w = jax.random.normal(KEY, (k, n))
+        mask = block_mask(w, rate=0.75, block=128)
+        kidx = compact_block_index(block_map(np.asarray(mask), 128))
+        assert kidx.shape[1] < k // 128  # fewer trips than dense
+
+    def test_masked_matmul_wrapper(self):
+        m, k, n = 128, 256, 256
+        x = jax.random.normal(KEY, (m, k))
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+        mask = block_mask(w, rate=0.5, block=128)
+        y = ops.masked_matmul(x, w, mask, interpret=True)
+        r = x @ (w * mask)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                                   rtol=1e-4, atol=1e-3)

@@ -1,0 +1,136 @@
+"""Attention-layer numerics: MEA vs naive softmax, MLA cache equivalence,
+MoE routing invariants (single-device paths)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.kernels.ref import flash_attention_ref
+from repro.models import layers as L
+from repro.models.common import Ctx
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestMEA:
+    @pytest.mark.parametrize("sq,chunk", [(64, 16), (64, 64), (50, 16)])
+    def test_matches_naive(self, sq, chunk):
+        b, h, d = 2, 3, 16
+        q = jax.random.normal(KEY, (b, sq, h, d))
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, sq, h, d))
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, sq, h, d))
+        pos = jnp.arange(sq)
+        y = L.mea_attention(q, k, v, pos, pos, causal=True, chunk=chunk)
+        r = flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_bf16_operand_mode_close(self):
+        b, s, h, d = 1, 64, 2, 32
+        q = jax.random.normal(KEY, (b, s, h, d))
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, d))
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d))
+        pos = jnp.arange(s)
+        y32 = L.mea_attention(q, k, v, pos, pos, causal=True, chunk=16)
+        y16 = L.mea_attention(q, k, v, pos, pos, causal=True, chunk=16,
+                              bf16_operands=True)
+        assert float(jnp.max(jnp.abs(y32 - y16))) < 0.03
+
+    def test_window_masks_old_tokens(self):
+        """With window=W, positions older than W contribute nothing."""
+        b, s, h, d = 1, 32, 1, 8
+        q = jax.random.normal(KEY, (b, s, h, d))
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, d))
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d))
+        pos = jnp.arange(s)
+        y = L.mea_attention(q, k, v, pos, pos, causal=True, window=4,
+                            chunk=8)
+        # perturb kv outside every query's window: outputs identical
+        k2 = k.at[:, :s - 8].set(jax.random.normal(
+            jax.random.PRNGKey(3), (b, s - 8, h, d)))
+        v2 = v.at[:, :s - 8].set(0.0)
+        y2 = L.mea_attention(q, k2, v2, pos, pos, causal=True, window=4,
+                             chunk=8)
+        np.testing.assert_allclose(np.asarray(y[:, -3:]),
+                                   np.asarray(y2[:, -3:]), atol=1e-5)
+
+
+class TestMLA:
+    def test_cache_decode_matches_full(self):
+        cfg = get_config("deepseek_v2_236b", smoke=True).replace(
+            act_dtype="float32")
+        p, _ = L.init_mla(KEY, cfg)
+        b, s = 2, 12
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (b, s, cfg.d_model)) * 0.3
+        pos = jnp.arange(s)
+        ctx = Ctx()
+        y_full, _ = L.mla_attention(ctx, cfg, p, x, pos)
+        cache, _ = L.init_mla_cache(cfg, b, 16, dtype=jnp.float32)
+        _, cache = L.mla_attention(ctx, cfg, p, x[:, :s - 1],
+                                   jnp.arange(s - 1), cache)
+        y_dec, _ = L.mla_attention(Ctx(decode=True), cfg, p,
+                                   x[:, s - 1:], jnp.asarray([s - 1]),
+                                   cache)
+        err = float(jnp.max(jnp.abs(y_dec - y_full[:, -1:])))
+        assert err < 1e-4, err
+
+    def test_cache_is_compressed(self):
+        """MLA cache stores kv_lora + rope dims, not full K/V — the point
+        of MLA (paper config kv_lora=512 vs 128 heads x 192)."""
+        cfg = get_config("deepseek_v2_236b", smoke=True)
+        cache, _ = L.init_mla_cache(cfg, 2, 16)
+        full_kv = 2 * cfg.n_heads * (cfg.nope_head_dim + cfg.v_head_dim)
+        stored = cache["ckv"].shape[-1] + cache["krope"].shape[-1]
+        assert stored < full_kv / 4
+
+
+class TestMoE:
+    def test_router_topk_gates_normalized(self):
+        cfg = get_config("granite_moe_1b_a400m", smoke=True)
+        x2 = jax.random.normal(KEY, (10, cfg.d_model))
+        w = jax.random.normal(jax.random.PRNGKey(1),
+                              (cfg.d_model, cfg.n_experts))
+        gates, eidx = L._router(cfg, w, x2)
+        assert gates.shape == (10, cfg.top_k)
+        np.testing.assert_allclose(np.asarray(jnp.sum(gates, -1)),
+                                   np.ones(10), rtol=1e-5)
+        assert int(jnp.max(eidx)) < cfg.n_experts
+
+    def test_rank_in_expert(self):
+        ids = jnp.asarray([2, 0, 2, 1, 2, 0], jnp.int32)
+        pos = L._rank_in_expert(ids, 3)
+        # expert 2 receives tokens at flat idx 0,2,4 -> ranks 0,1,2
+        assert pos.tolist() == [0, 0, 1, 0, 2, 1]
+
+    def test_aux_loss_balanced_vs_skewed(self):
+        cfg = get_config("granite_moe_1b_a400m", smoke=True)
+        d, e = cfg.d_model, cfg.n_experts
+        x = jax.random.normal(KEY, (1, 64, d))
+        w_uniform = jnp.zeros((d, e))
+        aux_u = L.moe_aux_loss(cfg, w_uniform, x)
+        # skew router towards expert 0
+        w_skew = jnp.zeros((d, e)).at[:, 0].set(5.0)
+        aux_s = L.moe_aux_loss(cfg, w_skew, x)
+        assert float(aux_s) > float(aux_u)
+
+
+class TestElasticRestore:
+    def test_checkpoint_restores_onto_new_sharding(self, tmp_path):
+        """Save unsharded, restore with explicit shardings (the elastic
+        path used when the mesh shape changes between runs)."""
+        from jax.sharding import (Mesh, NamedSharding,
+                                  PartitionSpec as P)
+        from repro.checkpoint.manager import CheckpointManager
+        state = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+        ckpt = CheckpointManager(str(tmp_path), async_save=False)
+        ckpt.save(0, state)
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        shardings = {"w": NamedSharding(mesh, P("data", None))}
+        restored, _ = ckpt.restore(shardings=shardings)
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(state["w"]))
+        assert restored["w"].sharding == shardings["w"]

@@ -1,0 +1,148 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.search import binary_search_max
+from repro.models.common import apply_rope
+from repro.optim.compression import compress_with_feedback
+from repro.quant.policy import (INT8, LEVELS, PrecisionPolicy, cast_level,
+                                quantize_int8)
+from repro.sparsity.masks import (apply_masks, block_mask, magnitude_mask,
+                                  sparsity_report)
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------- quantization
+@SETTINGS
+@given(st.integers(2, 64), st.integers(2, 64),
+       st.floats(0.1, 100.0))
+def test_int8_quant_error_bounded(rows, cols, scale_mag):
+    """|dequant - w| <= absmax/127 * 0.5 per output channel (+eps)."""
+    w = np.random.default_rng(rows * cols).normal(
+        0, scale_mag, (rows, cols)).astype(np.float32)
+    q, scale = quantize_int8(jnp.asarray(w), axis=0)
+    deq = np.asarray(q, np.float32) * np.asarray(scale)
+    bound = np.asarray(scale)[0] * 0.5 + 1e-6
+    assert np.all(np.abs(deq - w) <= bound + 1e-4 * scale_mag)
+
+
+@SETTINGS
+@given(st.sampled_from(LEVELS))
+def test_cast_level_idempotent(level):
+    w = jnp.asarray(np.random.default_rng(0).normal(0, 1, (16, 16)),
+                    jnp.float32)
+    once = cast_level(w, level)
+    twice = cast_level(once, level)
+    if level == INT8:
+        # int8 re-quantization of an already-quantized tensor may shift by
+        # one LSB of the (rescaled) grid; bound it instead of exact match
+        _, scale = quantize_int8(once, axis=0)
+        assert float(jnp.max(jnp.abs(twice - once))) <= \
+            float(jnp.max(scale)) + 1e-6
+    else:
+        np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+def test_policy_first_match_wins_and_exempt():
+    p = PrecisionPolicy(default="bf16", exempt=["*router*"])
+    p = p.with_rule("*mlp*", "int8")
+    p = p.with_rule("*mlp/w_up*", "fp8")   # newer rule wins
+    assert p.level_for("layers/mlp/w_up") == "fp8"
+    assert p.level_for("layers/mlp/w_down") == "int8"
+    assert p.level_for("layers/moe/router") == "bf16"
+    assert p.level_for("unmatched") == "bf16"
+
+
+# --------------------------------------------------------------- pruning
+@SETTINGS
+@given(st.integers(8, 128), st.integers(8, 128),
+       st.floats(0.0, 1.0))
+def test_magnitude_mask_rate(rows, cols, rate):
+    w = jnp.asarray(np.random.default_rng(rows + cols).normal(
+        0, 1, (rows, cols)), jnp.float32)
+    m = magnitude_mask(w, rate)
+    got = 1.0 - float(jnp.mean(m))
+    assert abs(got - rate) <= 1.5 / (rows * cols) + 0.02
+
+
+@SETTINGS
+@given(st.integers(1, 4), st.integers(1, 4), st.floats(0.0, 1.0))
+def test_block_mask_rate_block_resolution(bm, bn, rate):
+    w = jnp.asarray(np.random.default_rng(bm * 7 + bn).normal(
+        0, 1, (bm * 32, bn * 32)), jnp.float32)
+    m = block_mask(w, rate, block=32)
+    n_blocks = bm * bn
+    zeros = n_blocks - int(jnp.sum(m) // (32 * 32))
+    assert abs(zeros - round(rate * n_blocks)) <= 1
+
+
+def test_apply_masks_idempotent():
+    params = {"a": {"w": jnp.ones((8, 8))}}
+    masks = {"a/w": jnp.asarray(np.random.default_rng(0).integers(
+        0, 2, (8, 8)), jnp.float32)}
+    once = apply_masks(params, masks)
+    twice = apply_masks(once, masks)
+    np.testing.assert_array_equal(np.asarray(once["a"]["w"]),
+                                  np.asarray(twice["a"]["w"]))
+    rep = sparsity_report(masks)
+    assert rep["zeros"] == 64 - int(masks["a/w"].sum())
+
+
+# ---------------------------------------------------- binary search props
+@SETTINGS
+@given(st.floats(0.05, 0.95), st.sampled_from([0.01, 0.02, 0.05]))
+def test_binary_search_converges_to_boundary(boundary, beta):
+    res = binary_search_max(lambda x: (x <= boundary, x, {}), beta=beta)
+    assert res.best_x <= boundary + 1e-9
+    assert boundary - res.best_x <= beta + 1e-9
+
+
+# -------------------------------------------------- gradient compression
+@SETTINGS
+@given(st.integers(1, 30))
+def test_error_feedback_accumulates_exactly(steps):
+    """Sum of compressed grads + final residual == sum of true grads
+    (the error-feedback invariant that preserves convergence)."""
+    rng = np.random.default_rng(steps)
+    residual = jnp.zeros((32,), jnp.float32)
+    total_true = np.zeros((32,), np.float32)
+    total_sent = np.zeros((32,), np.float32)
+    for s in range(steps):
+        g = jnp.asarray(rng.normal(0, 1, (32,)), jnp.float32)
+        sent, residual = compress_with_feedback(g, residual)
+        total_true += np.asarray(g)
+        total_sent += np.asarray(sent)
+    np.testing.assert_allclose(total_sent + np.asarray(residual),
+                               total_true, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ rope
+@SETTINGS
+@given(st.integers(1, 8), st.integers(2, 32))
+def test_rope_preserves_norm(heads, seq):
+    x = jnp.asarray(np.random.default_rng(heads).normal(
+        0, 1, (1, seq, heads, 32)), jnp.float32)
+    pos = jnp.arange(seq)
+    y = apply_rope(x, pos, theta=10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)
+
+
+def test_rope_relative_position_invariance():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (1, 1, 1, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 1, 1, 64)), jnp.float32)
+
+    def dot_at(i, j):
+        qr = apply_rope(q, jnp.asarray([i]))
+        kr = apply_rope(k, jnp.asarray([j]))
+        return float(jnp.sum(qr * kr))
+
+    assert abs(dot_at(5, 3) - dot_at(10, 8)) < 1e-3
+    assert abs(dot_at(7, 7) - dot_at(0, 0)) < 1e-3

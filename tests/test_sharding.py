@@ -1,0 +1,163 @@
+"""Sharding rules + a small-mesh end-to-end lower/compile (the dry-run
+machinery at 8 fake devices, run in a subprocess so the main test process
+keeps its single real CPU device)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel.sharding import ShardingRules
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _mesh_1d():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+class TestShardingRules:
+    def test_divisible_dims_shard(self):
+        rules = ShardingRules.default(_mesh_1d())
+        spec = rules.spec_for(("vocab", "embed"), (1024, 64))
+        assert spec == P("model")
+
+    def test_non_divisible_falls_back(self):
+        # fake a 16-wide model axis via a mesh-shaped rules check
+        mesh = _mesh_1d()
+        rules = ShardingRules.default(mesh)
+        # axis size 1 always divides; simulate via explicit spec on dims
+        spec = rules.spec_for(("heads",), (28,))
+        assert spec in (P("model"), P())  # 1-device: divides trivially
+
+    def test_axis_not_reused(self):
+        rules = ShardingRules.default(_mesh_1d())
+        spec = rules.spec_for(("cache_seq", "kv_heads"), (64, 8))
+        entries = [e for e in spec if e is not None]
+        assert len(entries) == len(set(entries))  # no mesh axis twice
+
+    def test_overrides(self):
+        rules = ShardingRules.default(_mesh_1d(),
+                                      overrides={"cache_seq": None})
+        assert rules.spec_for(("cache_seq",), (64,)) == P()
+
+
+SUBPROC_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.configs.registry import get_config
+    from repro.configs.base import ShapeSpec
+    from repro.models.api import build_model
+    from repro.optim.optimizers import adamw
+    from repro.parallel.sharding import ShardingRules
+    from repro.runtime.train_loop import (batch_shardings, cache_shardings,
+                                          make_decode_step, make_train_step,
+                                          state_shardings,
+                                          init_train_state)
+
+    results = {}
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    for arch in ["qwen2_7b", "granite_moe_1b_a400m", "zamba2_2p7b"]:
+        cfg = get_config(arch, smoke=True).replace(remat="dots")
+        model = build_model(cfg, mesh=mesh)
+        rules = ShardingRules.default(mesh)
+        opt = adamw(1e-3)
+        step = make_train_step(model, opt)
+        with mesh:
+            sshard = state_shardings(model, rules, "adamw")
+            state_abs = jax.eval_shape(
+                lambda k: init_train_state(model, opt, k),
+                jax.random.PRNGKey(0))
+            specs = model.input_specs(ShapeSpec("t", 64, 8, "train"))
+            bshard = batch_shardings(model, rules, specs)
+            lowered = jax.jit(step, in_shardings=(sshard, bshard)
+                              ).lower(state_abs, specs)
+            compiled = lowered.compile()
+            ca = compiled.cost_analysis()
+            results[arch + ":train"] = float(
+                (ca[0] if isinstance(ca, (list, tuple)) else ca)
+                .get("flops", -1))
+            # decode path too
+            dstep = make_decode_step(model)
+            cache_abs, _ = model.abstract_cache(8, 64)
+            cshard = cache_shardings(model, rules, 8, 64)
+            pshard = sshard["params"]
+            dl = jax.jit(dstep, in_shardings=(
+                pshard, cshard,
+                rules.sharding_for(("batch", None), (8, 1)))).lower(
+                model.abstract_params(), cache_abs,
+                jax.ShapeDtypeStruct((8, 1), jnp.int32))
+            dl.compile()
+            results[arch + ":decode"] = "ok"
+    print("RESULT " + json.dumps(results))
+""")
+
+
+@pytest.mark.slow
+def test_small_mesh_lower_compile_multi_arch():
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, "-c", SUBPROC_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULT ")][0]
+    results = json.loads(line[len("RESULT "):])
+    assert results["qwen2_7b:decode"] == "ok"
+    assert results["granite_moe_1b_a400m:decode"] == "ok"
+    assert results["zamba2_2p7b:decode"] == "ok"
+    assert all(v != -1 for k, v in results.items() if k.endswith("train"))
+
+
+@pytest.mark.slow
+def test_moe_ep_matches_dense_reference_on_mesh():
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import Mesh
+        from repro.configs.registry import get_config
+        from repro.models import layers as L
+        from repro.models.common import Ctx
+        cfg = get_config("granite_moe_1b_a400m", smoke=True)
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
+                    ("data", "model"))
+        p, _ = L.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (4, 16, cfg.d_model)) * 0.5
+        ref = L._moe_dense_reference(Ctx(), cfg, p, x)
+        with mesh:
+            y = jax.jit(lambda x: L._moe_ep(Ctx(mesh=mesh), cfg, p, x))(x)
+        err = float(jnp.max(jnp.abs(y - ref)))
+        # decode-sized path
+        x2 = jax.random.normal(jax.random.PRNGKey(2),
+                               (2, 1, cfg.d_model)) * 0.5
+        ref2 = L._moe_dense_reference(Ctx(), cfg, p, x2)
+        with mesh:
+            y2 = jax.jit(lambda x: L._moe_ep(Ctx(mesh=mesh), cfg, p,
+                                             x))(x2)
+        err2 = float(jnp.max(jnp.abs(y2 - ref2)))
+        print(f"RESULT {err} {err2}")
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULT ")][0]
+    err, err2 = (float(t) for t in line.split()[1:])
+    assert err < 5e-3   # bf16 expert FFN vs f32 reference
+    assert err2 < 5e-3

@@ -1,0 +1,113 @@
+"""O-task / λ-task integration: the paper's strategies end-to-end (small)."""
+
+import pytest
+
+from repro.core.metamodel import MetaModel
+from repro.core.strategies import (combined_strategy, pruning_strategy,
+                                   quantization_strategy, scaling_strategy)
+
+FAST = dict(train_epochs=1, train_samples=1024)
+
+
+@pytest.fixture(scope="module")
+def pruned_meta():
+    flow = pruning_strategy("jet_dnn", train_epochs=1,
+                            pruning_rate_thresh=0.1)
+    meta = MetaModel({"ModelGen.train_samples": 1024,
+                      "ModelGen.train_epochs": 2})
+    return flow.execute(meta)
+
+
+class TestPruningStrategy:
+    def test_finds_nonzero_rate_within_tolerance(self, pruned_meta):
+        res = pruned_meta.get("pruning.result")
+        assert res["pruning_rate"] > 0.2
+        assert res["base_accuracy"] - res["accuracy"] <= 0.02 + 1e-9
+
+    def test_resource_proxy_decreases(self, pruned_meta):
+        res = pruned_meta.get("pruning.result")
+        assert res["macs_fraction"] < 0.8  # DSP-analogue reduction
+
+    def test_step_count_bounded(self, pruned_meta):
+        # 1 + log2(1/beta) formula: beta=0.1 -> ~4.3 bisections + 2 probes
+        res = pruned_meta.get("pruning.result")
+        assert res["search_steps"] <= 8
+
+    def test_model_space_lineage(self, pruned_meta):
+        art = pruned_meta.latest("dnn")
+        lineage = pruned_meta.lineage(art.name)
+        assert len(lineage) == 2  # pruned -> generated
+
+    def test_probe_trace_recorded(self, pruned_meta):
+        probes = pruned_meta.trace("pruning.probe")
+        assert len(probes) >= 3
+        assert all("accuracy" in p for p in probes)
+
+
+class TestQuantizationStrategy:
+    def test_weight_bits_reduced_at_tolerance(self):
+        meta = MetaModel({"ModelGen.train_samples": 1024,
+                          "ModelGen.train_epochs": 2})
+        quantization_strategy("jet_dnn",
+                              tolerate_acc_loss=0.02).execute(meta)
+        res = meta.get("quantization.result")
+        assert res["base_accuracy"] - res["accuracy"] < 0.02 + 1e-9
+        # fp32 -> int8 everywhere would be 4x; require at least 2x
+        gen = next(iter(meta.models("dnn"))).metrics
+        assert res["weight_bits"] <= gen["weight_bits"] / 2
+
+
+class TestScalingStrategy:
+    def test_scaling_shrinks_when_tolerant(self):
+        # generous tolerance: the paper's claim under test is the search
+        # mechanics (walk the ladder, keep the last feasible width), not a
+        # specific accuracy on synthetic data
+        meta = MetaModel({"ModelGen.train_samples": 1024,
+                          "ModelGen.train_epochs": 2})
+        scaling_strategy("jet_dnn", tolerate_acc_loss=0.2,
+                         max_trials_num=2,
+                         train_epochs=3).execute(meta)
+        res = meta.get("scaling.result")
+        assert res["scale"] < 1.0
+        assert res["base_accuracy"] - res["accuracy"] <= 0.2 + 1e-9
+        assert len(meta.trace("scaling.probe")) >= 1
+
+
+class TestCombinedStrategy:
+    def test_order_is_programmable(self):
+        f1 = combined_strategy("jet_dnn", "SP")
+        f2 = combined_strategy("jet_dnn", "PS")
+        names1 = [t.name for t in f1.tasks]
+        names2 = [t.name for t in f2.tasks]
+        assert names1 == ["ModelGen", "Scaling", "Pruning"]
+        assert names2 == ["ModelGen", "Pruning", "Scaling"]
+
+    def test_pq_combined_runs(self):
+        meta = MetaModel({"ModelGen.train_samples": 768,
+                          "ModelGen.train_epochs": 2,
+                          "Pruning.train_epochs": 1,
+                          "Pruning.pruning_rate_thresh": 0.2})
+        combined_strategy("jet_dnn", "PQ").execute(meta)
+        art = meta.latest("dnn")
+        assert art.name.startswith("jet_dnn+P+Q".split("+")[0])
+        # both O-tasks left their marks
+        assert meta.get("pruning.result") is not None
+        assert meta.get("quantization.result") is not None
+        # combined resources beat single-task pruning alone
+        q = meta.get("quantization.result")
+        assert q["weight_bits"] < meta.get("pruning.result")["weight_bits"]
+
+
+class TestLMOtasks:
+    def test_pruning_on_lm_arch(self):
+        """O-tasks apply to the assigned LM archs too (DESIGN.md §4)."""
+        from repro.core.flow import DesignFlow
+        from repro.tasks.model_gen import ModelGen
+        from repro.tasks.pruning import Pruning
+        flow = DesignFlow("lm-prune")
+        flow.chain(ModelGen(model="qwen2_7b", smoke=True, train_en=False),
+                   Pruning(train_epochs=1, pruning_rate_thresh=0.25,
+                           tolerate_acc_loss=0.5))
+        meta = flow.execute()
+        res = meta.get("pruning.result")
+        assert res is not None and res["search_steps"] >= 2
