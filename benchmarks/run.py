@@ -4,24 +4,33 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_pruning  -> Fig. 3 / Fig. 4 (auto-pruning curves + resources)
   bench_combined -> Fig. 5 (combined strategies, order sensitivity)
   bench_table2   -> Table II (strategy comparison, resource proxies)
-  bench_kernels  -> kernel micro-benchmarks (structural savings)
+  bench_kernels  -> kernel micro-benchmarks (tuned-vs-default tiles)
   bench_roofline -> §Roofline rows from the dry-run sweeps
+
+Usage: ``python benchmarks/run.py [suite ...]`` where suite is any of
+pruning/combined/table2/kernels/roofline (default: all).  CI runs
+``run.py kernels`` as the smoke suite; the kernel autotuner persists its
+tile cache at $REPRO_AUTOTUNE_CACHE so warm runs skip the tile search.
 """
 import sys
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
     if "benchmarks" not in sys.modules:
         sys.path.insert(0, __file__.rsplit("/", 2)[0])
     from benchmarks import (bench_combined, bench_kernels, bench_pruning,
                             bench_roofline, bench_table2)
+    suites = {"pruning": bench_pruning, "combined": bench_combined,
+              "table2": bench_table2, "kernels": bench_kernels,
+              "roofline": bench_roofline}
+    picked = argv if argv else list(suites)
+    unknown = [s for s in picked if s not in suites]
+    if unknown:
+        raise SystemExit(f"unknown suite(s) {unknown}; have {list(suites)}")
     print("name,us_per_call,derived")
-    bench_pruning.main()
-    bench_combined.main()
-    bench_table2.main()
-    bench_kernels.main()
-    bench_roofline.main()
+    for s in picked:
+        suites[s].main()
 
 
 if __name__ == '__main__':
-    main()
+    main(sys.argv[1:])

@@ -4,8 +4,10 @@ parameters through the shared CFG.
 
 This example builds a flow the paper doesn't ship: an iterative
 prune→quantize loop with a convergence condition on the weight-bits
-resource (keep optimizing while the last pass improved it by >10%), then
-compares O-task orders.
+resource (keep optimizing while the last pass improved it by >10%),
+followed by a TUNE stage that autotunes the Pallas tile configs for the
+shapes the optimized model executes (docs/autotune.md); then compares
+O-task orders.
 
     PYTHONPATH=src python examples/custom_flow.py
 """
@@ -21,6 +23,7 @@ from repro.core.strategies import combined_strategy    # noqa: E402
 from repro.tasks.model_gen import ModelGen             # noqa: E402
 from repro.tasks.pruning import Pruning                # noqa: E402
 from repro.tasks.quantization import Quantization      # noqa: E402
+from repro.tasks.tune import Tune                      # noqa: E402
 
 CFG = {"ModelGen.train_samples": 2048, "ModelGen.train_epochs": 4,
        "Pruning.train_epochs": 1, "Pruning.pruning_rate_thresh": 0.1}
@@ -33,18 +36,35 @@ def improving(meta: MetaModel, outputs) -> bool:
     hist.append(bits)
     meta.set("bits_history", hist)
     if len(hist) < 2 or len(hist) > 4:      # bound the loop
-        return len(hist) < 2
-    return hist[-1] < 0.9 * hist[-2]
+        keep_going = len(hist) < 2
+    else:
+        keep_going = hist[-1] < 0.9 * hist[-2]
+    meta.set("pq_improving", keep_going)    # read by the TUNE edge
+    return keep_going
+
+
+def converged(meta: MetaModel, outputs) -> bool:
+    """TUNE-edge condition: fire once the P<->Q loop stops improving.
+
+    Reads the decision ``improving`` recorded (the back edge is created
+    first, so it is evaluated first per dispatch) — re-running the
+    threshold logic here would duplicate it and double-append the history.
+    """
+    return not meta.get("pq_improving", True)
 
 
 def build_iterative_flow() -> DesignFlow:
-    flow = DesignFlow("iterative-PQ")
+    flow = DesignFlow("iterative-PQT")
     gen = flow.add(ModelGen(model="jet_dnn"))
     prune = flow.add(Pruning(train_epochs=1, pruning_rate_thresh=0.1))
     quant = flow.add(Quantization(tolerate_acc_loss=0.02))
+    # TUNE last: it sees the pruned/quantized artifact, so it tunes the
+    # Pallas tile configs for the kernels that model actually executes.
+    tune = flow.add(Tune(max_trials=4, iters=1, max_problems=2))
     flow.connect(gen, prune)
     flow.connect(prune, quant)
     flow.connect(quant, prune, condition=improving)   # the cycle
+    flow.connect(quant, tune, condition=converged)
     return flow
 
 
@@ -56,6 +76,9 @@ def main():
     print(f"\niterative P<->Q: acc={final.metrics['accuracy']:.4f} "
           f"bits={final.metrics['weight_bits']:.0f} "
           f"(history {meta.get('bits_history')})")
+    tuned = meta.get("tune.result", {})
+    print(f"TUNE: {tuned.get('search_steps', 0)} tile probes -> "
+          f"{len(tuned.get('configs', {}))} tuned kernel configs")
 
     # order sensitivity, one-character edits (paper Fig. 5)
     for order in ("PQ", "QP"):

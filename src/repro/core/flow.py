@@ -15,6 +15,11 @@ nodes (``n_in == 0``, e.g. MODEL-GEN) fire exactly once at the start.
 Cycles are first-class: a back edge with a condition implements the paper's
 iterative optimization loops; the executor bounds total firings with
 ``max_steps`` so an ill-conditioned flow terminates deterministically.
+
+Contract: within one dispatch, a node's outgoing edge conditions are
+evaluated in edge-creation order.  Conditions may rely on this — e.g. a
+back-edge condition recording a decision in the MetaModel that a
+later-created exit-edge condition reads (examples/custom_flow.py).
 """
 
 from __future__ import annotations
@@ -152,6 +157,10 @@ class DesignFlow:
 
     def _dispatch(self, meta: MetaModel, node: int,
                   outputs: list[str]) -> None:
+        # Conditions run exactly once per edge, in edge-creation order
+        # (module-docstring contract) — side-effecting conditions must not
+        # be re-evaluated even for n_out > 1 nodes.
+        live: list[_Edge] = []
         for e in self.edges:
             if e.src != node:
                 continue
@@ -159,15 +168,15 @@ class DesignFlow:
                 meta.record("flow.edge_skipped", src=self.tasks[e.src].name,
                             dst=self.tasks[e.dst].name)
                 continue
-            # n_out == 1: the single output fans out to every live edge.
-            # n_out > 1: outputs are distributed to live edges in order.
-            if self.tasks[node].n_out <= 1:
+            live.append(e)
+        # n_out == 1: the single output fans out to every live edge.
+        # n_out > 1: outputs are distributed to live edges in order.
+        if self.tasks[node].n_out <= 1:
+            for e in live:
                 for out in outputs:
                     e.tokens.append(out)
-            else:
-                live = [x for x in self.edges if x.src == node and (
-                    x.condition is None or x.condition(meta, outputs))]
-                idx = live.index(e)
+        else:
+            for idx, e in enumerate(live):
                 if idx < len(outputs):
                     e.tokens.append(outputs[idx])
 

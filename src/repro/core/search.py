@@ -12,9 +12,10 @@ user-defined tolerance (<= alpha_p).  The algorithm terminates when the rate
 difference is below a threshold (beta_p).  The number of steps is determined
 by 1 + log2(1/beta_p)."
 
-These helpers are generic so that PRUNING, SCALING, QUANTIZATION and
-SHARDING-SEARCH all share the same machinery and the same step-trace format
-(consumed by benchmarks/bench_pruning.py to reproduce Fig. 3/4).
+These helpers are generic so that PRUNING, SCALING, QUANTIZATION,
+SHARDING-SEARCH and TUNE all share the same machinery and the same
+step-trace format (consumed by benchmarks/bench_pruning.py to reproduce
+Fig. 3/4, and by the TUNE task to publish kernel-tuning trials).
 """
 
 from __future__ import annotations
@@ -102,6 +103,27 @@ def monotone_shrink_search(candidates: Sequence[Any],
         if not ok:
             break
         best_x, best_obj = x, obj
+    return SearchResult(best_x, best_obj, steps)
+
+
+def exhaustive_search(candidates: Sequence[Any],
+                      evaluate: Callable[[Any], tuple[bool, float, dict]]
+                      ) -> SearchResult:
+    """Evaluate every candidate; keep the feasible one with the highest
+    objective (ties: first seen wins).
+
+    Used by the TUNE O-task: the candidate space is already pruned by the
+    autotuner's divisibility/VMEM constraints, so the search is a flat sweep
+    with ``objective = -latency_us`` — each measured tile config becomes one
+    :class:`SearchStep` in the MetaModel history, same as a pruning probe.
+    """
+    steps: list[SearchStep] = []
+    best_x, best_obj = None, -math.inf
+    for x in candidates:
+        ok, obj, info = evaluate(x)
+        steps.append(SearchStep(len(steps) + 1, x, obj, ok, info))
+        if ok and obj > best_obj:
+            best_x, best_obj = x, obj
     return SearchResult(best_x, best_obj, steps)
 
 

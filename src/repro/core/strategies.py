@@ -23,9 +23,10 @@ from repro.tasks.pruning import Pruning
 from repro.tasks.quantization import Quantization
 from repro.tasks.scaling import Scaling
 from repro.tasks.sharding_search import ShardingSearch
+from repro.tasks.tune import Tune
 
 O_TASKS = {"P": Pruning, "S": Scaling, "Q": Quantization,
-           "H": ShardingSearch}
+           "H": ShardingSearch, "T": Tune}
 
 
 def pruning_strategy(model: str = "jet_dnn", **params) -> DesignFlow:
@@ -44,6 +45,14 @@ def scaling_strategy(model: str = "jet_dnn", **params) -> DesignFlow:
 def quantization_strategy(model: str = "jet_dnn", **params) -> DesignFlow:
     flow = DesignFlow(f"quantization({model})")
     flow.chain(ModelGen(model=model), Quantization(**params))
+    return flow
+
+
+def tune_strategy(model: str = "jet_dnn", **params) -> DesignFlow:
+    """MODEL-GEN → TUNE: autotune the Pallas tile configs for the shapes
+    this model executes (kernels/autotune.py)."""
+    flow = DesignFlow(f"tune({model})")
+    flow.chain(ModelGen(model=model), Tune(**params))
     return flow
 
 

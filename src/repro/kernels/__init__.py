@@ -1,3 +1,22 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+from repro.kernels.block_sparse_matmul import (block_sparse_matmul,
+                                               compact_block_index)
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quant_matmul import quant_matmul
+
+__all__ = ["block_sparse_matmul", "compact_block_index", "flash_attention",
+           "quant_matmul", "tuned_block_sparse_matmul",
+           "tuned_flash_attention", "tuned_quant_matmul"]
+
+
+def __getattr__(name):
+    # tuned_* dispatchers pull in core.search; import lazily so plain
+    # kernel users don't pay for the autotune machinery.
+    if name in ("tuned_block_sparse_matmul", "tuned_flash_attention",
+                "tuned_quant_matmul"):
+        from repro.kernels import autotune
+        return getattr(autotune, name)
+    raise AttributeError(name)

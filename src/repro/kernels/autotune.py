@@ -1,0 +1,537 @@
+"""Per-shape tile autotuner for the Pallas kernels.
+
+MetaML's claim is "automating the selection and configuration of low-level
+optimization techniques"; on the TPU stack the low-level knobs are Pallas
+tile sizes.  This module closes that loop: for a concrete (kernel, shape,
+dtype, flags) problem it
+
+1. enumerates a *pruned* candidate space — tile sizes drawn from
+   :data:`TILE_SIZES`, filtered by divisibility against the problem shape
+   and by a VMEM-footprint model against :data:`VMEM_BUDGET` (a candidate
+   that would not fit on-chip is never timed);
+2. measures every surviving candidate with the benchmarks/common.py
+   ``timeit`` harness (interpret mode on CPU, real timing on TPU);
+3. memoizes the winner in a persistent on-disk JSON cache keyed by
+   ``kernel|problem`` so later calls — including future processes — skip
+   straight to the tuned config.
+
+The default (128x128[,512]) config is always part of the candidate space,
+so the tuned config is never slower than the fixed default *as measured*.
+
+Cache file format (``REPRO_AUTOTUNE_CACHE`` or ~/.cache/repro/autotune.json)::
+
+    {"version": 1,
+     "entries": {
+       "quant_matmul|{\"dtype\":\"float32\",\"k\":512,...}": {
+         "config": {"block_m": 256, "block_n": 128, "block_k": 512},
+         "us": 1234.5,
+         "n_trials": 9,
+         "backend": "cpu",
+         "t": 1700000000.0}}}
+
+The TUNE O-task (tasks/tune.py) drives :func:`tune` and republishes every
+trial as a ``SearchStep`` in the MetaModel history; ``tuned_*`` wrappers
+give kernels-layer callers transparent tune-on-miss dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import math
+import os
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.search import SearchResult, exhaustive_search
+from repro.kernels.block_sparse_matmul import block_sparse_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quant_matmul import BK, BM, BN, quant_matmul
+
+TILE_SIZES = (32, 64, 128, 256)
+# Conservative per-step budget: half of the ~16 MB VMEM per TPU core,
+# leaving headroom for double-buffered pipelining of the HBM->VMEM copies.
+VMEM_BUDGET = 8 * 2 ** 20
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+CACHE_VERSION = 1
+
+
+# --------------------------------------------------------------------- cache
+def default_cache_path() -> str:
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+_MEM: dict[str, dict[str, Any]] = {}   # path -> {"entries": {...}} (loaded once)
+
+
+def _load(path: str) -> dict[str, Any]:
+    if path not in _MEM:
+        data: dict[str, Any] = {"version": CACHE_VERSION, "entries": {}}
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+            if raw.get("version") == CACHE_VERSION:
+                data = raw
+        except (OSError, ValueError):
+            pass
+        _MEM[path] = data
+    return _MEM[path]
+
+
+def _store(path: str, key: str, entry: dict[str, Any]) -> None:
+    # Merge against a fresh read of the file, not the process snapshot:
+    # concurrent writers (pytest-xdist, a flow next to a bench) would
+    # otherwise have their entries clobbered by our stale view.  The temp
+    # name is per-writer so two simultaneous stores cannot interleave
+    # inside one file; last os.replace wins.
+    _MEM.pop(path, None)
+    data = _load(path)
+    data["entries"][key] = entry
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = f"{path}.{os.getpid()}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def clear_memory_cache() -> None:
+    """Drop the in-process view of every cache file (tests)."""
+    _MEM.clear()
+    _RESOLVED.clear()
+
+
+def cache_key(kernel: str, problem: dict[str, Any]) -> str:
+    return f"{kernel}|{json.dumps(problem, sort_keys=True)}"
+
+
+# ------------------------------------------------------------------- results
+@dataclasses.dataclass(frozen=True)
+class Trial:
+    config: dict[str, int]
+    us: float
+    vmem_bytes: int
+
+
+@dataclasses.dataclass
+class TuneResult:
+    kernel: str
+    key: str
+    config: dict[str, int]
+    us: float
+    cached: bool
+    trials: list[Trial] = dataclasses.field(default_factory=list)
+    search: SearchResult | None = None   # None on a cache hit
+
+    @property
+    def default_us(self) -> float | None:
+        default = KERNELS[self.kernel].default_config
+        for t in self.trials:
+            if t.config == default:
+                return t.us
+        return None
+
+
+# ------------------------------------------------------- kernel descriptors
+def _itemsize(dtype: str) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _divides(tile: int, dim: int) -> bool:
+    return dim % min(tile, dim) == 0
+
+
+def _axis(default: int, extra: tuple[int, ...] = ()) -> tuple[int, ...]:
+    """Tile sizes for one dim, default first: when small problem dims clamp
+    several nominal tiles to the same effective tile, the dedup in the
+    candidate generators keeps the first-seen config — default-first makes
+    that representative the literal default config, preserving the
+    'default is always measured' invariant (and TuneResult.default_us)."""
+    sizes = set(TILE_SIZES) | set(extra) | {default}
+    return tuple(sorted(sizes, key=lambda t: (t != default, t)))
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    """One tunable kernel: candidate model + benchmark-input factory."""
+
+    name: str
+    default_config: dict[str, int]
+    candidates: Callable[[dict[str, Any]], list[tuple[dict[str, int], int]]]
+    make_runner: Callable[[dict[str, Any], dict[str, int], bool],
+                          Callable[[], Any]]
+
+
+# flash attention ------------------------------------------------------------
+def _fa_vmem(problem: dict[str, Any], cfg: dict[str, int]) -> int:
+    d = problem["d"]
+    bq = min(cfg["block_q"], problem["sq"])
+    bkv = min(cfg["block_kv"], problem["skv"])
+    item = _itemsize(problem["dtype"])
+    blocks = (2 * bq * d + 2 * bkv * d) * item      # q, out, k, v tiles
+    scratch = (2 * bq + bq * d) * 4                 # m, l, acc (f32)
+    temps = 2 * bq * bkv * 4                        # s and p (f32)
+    return blocks + scratch + temps
+
+
+def _fa_candidates(problem: dict[str, Any]
+                   ) -> list[tuple[dict[str, int], int]]:
+    out, seen = [], set()
+    for bq in _axis(128):
+        for bkv in _axis(128):
+            cfg = {"block_q": bq, "block_kv": bkv}
+            eff = (min(bq, problem["sq"]), min(bkv, problem["skv"]))
+            if eff in seen:     # clamped duplicates time identically
+                continue
+            seen.add(eff)
+            out.append((cfg, _fa_vmem(problem, cfg)))
+    return out
+
+
+@functools.lru_cache(maxsize=8)
+def _fa_inputs(problem_json: str):
+    problem = json.loads(problem_json)
+    dtype = jnp.dtype(problem["dtype"])
+    q = jax.random.normal(
+        jax.random.PRNGKey(0),
+        (problem["b"], problem["sq"], problem["h"], problem["d"])
+    ).astype(dtype)
+    kv_shape = (problem["b"], problem["skv"], problem["kv_heads"],
+                problem["d"])
+    k = jax.random.normal(jax.random.PRNGKey(1), kv_shape).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), kv_shape).astype(dtype)
+    return q, k, v
+
+
+def _fa_runner(problem: dict[str, Any], cfg: dict[str, int],
+               interpret: bool) -> Callable[[], Any]:
+    # inputs depend only on the problem: build once per search, not per
+    # candidate (lru keyed on the canonical problem JSON)
+    q, k, v = _fa_inputs(json.dumps(problem, sort_keys=True))
+    return lambda: flash_attention(
+        q, k, v, causal=problem["causal"], window=problem["window"],
+        interpret=interpret, block_q=cfg["block_q"],
+        block_kv=cfg["block_kv"])
+
+
+def flash_attention_problem(q_shape, kv_shape, dtype, *,
+                            causal: bool = True,
+                            window: int = 0) -> dict[str, Any]:
+    b, sq, h, d = (int(x) for x in q_shape)
+    _, skv, kvh, _ = (int(x) for x in kv_shape)
+    return {"b": b, "sq": sq, "h": h, "d": d, "skv": skv, "kv_heads": kvh,
+            "dtype": jnp.dtype(dtype).name, "causal": bool(causal),
+            "window": int(window)}
+
+
+# quant matmul ---------------------------------------------------------------
+def _qmm_vmem(problem: dict[str, Any], cfg: dict[str, int]) -> int:
+    bm = min(cfg["block_m"], problem["m"])
+    bn = min(cfg["block_n"], problem["n"])
+    bk = min(cfg["block_k"], problem["k"])
+    blocks = bm * bk + bk * bn          # int8 tiles
+    scales = (bm + bn) * 4
+    acc = bm * bn * 4                   # int32 accumulator
+    out = bm * bn * _itemsize(problem["out_dtype"])
+    temps = bm * bn * 4                 # dequant f32 temporary
+    return blocks + scales + acc + out + temps
+
+
+def _qmm_candidates(problem: dict[str, Any]
+                    ) -> list[tuple[dict[str, int], int]]:
+    m, n, k = problem["m"], problem["n"], problem["k"]
+    out, seen = [], set()
+    for bm in _axis(BM):
+        for bn in _axis(BN):
+            for bk in _axis(BK):
+                if not (_divides(bm, m) and _divides(bn, n)
+                        and _divides(bk, k)):
+                    continue
+                eff = (min(bm, m), min(bn, n), min(bk, k))
+                if eff in seen:
+                    continue
+                seen.add(eff)
+                cfg = {"block_m": bm, "block_n": bn, "block_k": bk}
+                out.append((cfg, _qmm_vmem(problem, cfg)))
+    return out
+
+
+@functools.lru_cache(maxsize=8)
+def _mm_inputs(problem_json: str):
+    problem = json.loads(problem_json)
+    dtype = jnp.dtype(problem["dtype"])
+    x = jax.random.normal(jax.random.PRNGKey(0),
+                          (problem["m"], problem["k"])).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1),
+                          (problem["k"], problem["n"])).astype(dtype)
+    return x, w
+
+
+def _qmm_runner(problem: dict[str, Any], cfg: dict[str, int],
+                interpret: bool) -> Callable[[], Any]:
+    x, w = _mm_inputs(json.dumps(problem, sort_keys=True))
+    return lambda: quant_matmul(
+        x, w, interpret=interpret, block_m=cfg["block_m"],
+        block_n=cfg["block_n"], block_k=cfg["block_k"])
+
+
+def quant_matmul_problem(x_shape, w_shape, dtype, *,
+                         out_dtype=jnp.float32) -> dict[str, Any]:
+    m, k = (int(v) for v in x_shape)
+    _, n = (int(v) for v in w_shape)
+    return {"m": m, "k": k, "n": n, "dtype": jnp.dtype(dtype).name,
+            "out_dtype": jnp.dtype(out_dtype).name}
+
+
+# block-sparse matmul --------------------------------------------------------
+def _bsmm_vmem(problem: dict[str, Any], cfg: dict[str, int]) -> int:
+    block = problem["block"]
+    bm = min(cfg["block_m"], problem["m"])
+    item = _itemsize(problem["dtype"])
+    blocks = (bm * block + block * block) * item    # x, w tiles
+    acc_out = 2 * bm * block * 4                    # acc scratch + out tile
+    return blocks + acc_out
+
+
+def _bsmm_candidates(problem: dict[str, Any]
+                     ) -> list[tuple[dict[str, int], int]]:
+    m = problem["m"]
+    out, seen = [], set()
+    for bm in _axis(128):
+        if not _divides(bm, m):
+            continue
+        eff = min(bm, m)
+        if eff in seen:
+            continue
+        seen.add(eff)
+        cfg = {"block_m": bm}
+        out.append((cfg, _bsmm_vmem(problem, cfg)))
+    return out
+
+
+def _bsmm_runner(problem: dict[str, Any], cfg: dict[str, int],
+                 interpret: bool) -> Callable[[], Any]:
+    block = problem["block"]
+    x, w = _mm_inputs(json.dumps(problem, sort_keys=True))
+    nb = problem["n"] // block
+    live = min(problem["max_live"], problem["k"] // block)
+    kidx = jnp.asarray(np.tile(np.arange(live, dtype=np.int32), (nb, 1)))
+    return lambda: block_sparse_matmul(
+        x, w, kidx, block=block, block_m=cfg["block_m"],
+        interpret=interpret)
+
+
+def block_sparse_matmul_problem(x_shape, w_shape, dtype, *,
+                                max_live: int,
+                                block: int = 128) -> dict[str, Any]:
+    m, k = (int(v) for v in x_shape)
+    _, n = (int(v) for v in w_shape)
+    return {"m": m, "k": k, "n": n, "block": int(block),
+            "max_live": int(max_live), "dtype": jnp.dtype(dtype).name}
+
+
+KERNELS: dict[str, KernelEntry] = {
+    "flash_attention": KernelEntry(
+        "flash_attention", {"block_q": 128, "block_kv": 128},
+        _fa_candidates, _fa_runner),
+    "quant_matmul": KernelEntry(
+        "quant_matmul", {"block_m": BM, "block_n": BN, "block_k": BK},
+        _qmm_candidates, _qmm_runner),
+    "block_sparse_matmul": KernelEntry(
+        "block_sparse_matmul", {"block_m": 128},
+        _bsmm_candidates, _bsmm_runner),
+}
+
+
+# ------------------------------------------------------------------- tuning
+def _fallback_timeit(fn, *, warmup: int = 1, iters: int = 5) -> float:
+    """Same contract as benchmarks/common.py::timeit (median µs/call)."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn()
+        for leaf in jax.tree.leaves(out):
+            if hasattr(leaf, "block_until_ready"):
+                leaf.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _default_timer(fn, *, warmup: int, iters: int) -> float:
+    try:
+        from benchmarks.common import timeit
+    except ImportError:
+        return _fallback_timeit(fn, warmup=warmup, iters=iters)
+    return timeit(fn, warmup=warmup, iters=iters)
+
+
+def _config_distance(cfg: dict[str, int], default: dict[str, int]) -> float:
+    return sum(abs(math.log2(cfg[k]) - math.log2(default[k]))
+               for k in default)
+
+
+def enumerate_candidates(kernel: str, problem: dict[str, Any], *,
+                         vmem_budget: int = VMEM_BUDGET,
+                         max_trials: int | None = None
+                         ) -> list[tuple[dict[str, int], int]]:
+    """Pruned candidate list for ``kernel`` on ``problem``.
+
+    Divisibility-infeasible and VMEM-over-budget configs are dropped; the
+    remainder is ordered default-first (distance in log2-tile space) and
+    optionally capped at ``max_trials`` — the default config survives any
+    cap, which is what guarantees tuned-never-slower-than-default.
+    """
+    entry = KERNELS[kernel]
+    cands = [(c, v) for c, v in entry.candidates(problem)
+             if v <= vmem_budget]
+    cands.sort(key=lambda cv: (_config_distance(cv[0], entry.default_config),
+                               sorted(cv[0].items())))
+    if max_trials is not None:
+        cands = cands[:max(1, max_trials)]
+    return cands
+
+
+def tune(kernel: str, problem: dict[str, Any], *,
+         cache_path: str | None = None,
+         force: bool = False,
+         interpret: bool | None = None,
+         iters: int = 3, warmup: int = 1,
+         max_trials: int | None = 16,
+         vmem_budget: int = VMEM_BUDGET,
+         timer: Callable[..., float] | None = None) -> TuneResult:
+    """Find (or recall) the best tile config for ``kernel`` on ``problem``.
+
+    On a cache hit the measurement loop is skipped entirely; on a miss every
+    surviving candidate is timed and the winner is persisted.
+    """
+    if kernel not in KERNELS:
+        raise KeyError(f"unknown tunable kernel {kernel!r}; "
+                       f"have {sorted(KERNELS)}")
+    path = cache_path or default_cache_path()
+    key = cache_key(kernel, problem)
+    if not force:
+        entry = _load(path)["entries"].get(key)
+        # A cached entry only counts if it is evidence for THIS request:
+        # same backend (CPU-interpret timings say nothing about the MXU),
+        # at least as deep a search, and at least as many timing iters as
+        # now requested (a shallow/noisy bench sweep must not permanently
+        # shadow a fuller TUNE search).
+        if entry is not None and entry.get("backend") == \
+                jax.default_backend() and entry.get("iters", 0) >= iters \
+                and entry.get("vmem_budget", float("inf")) <= vmem_budget:
+            requested = len(enumerate_candidates(
+                kernel, problem, vmem_budget=vmem_budget,
+                max_trials=max_trials))
+            if entry.get("n_trials", 0) >= requested:
+                return TuneResult(kernel, key, dict(entry["config"]),
+                                  float(entry["us"]), cached=True)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    timer = timer or _default_timer
+    spec = KERNELS[kernel]
+    cands = enumerate_candidates(kernel, problem, vmem_budget=vmem_budget,
+                                 max_trials=max_trials)
+    if not cands:
+        raise ValueError(f"{kernel}: no feasible tile candidate for "
+                         f"{problem} under vmem_budget={vmem_budget}")
+    vmem_of = {json.dumps(c, sort_keys=True): v for c, v in cands}
+    trials: list[Trial] = []
+
+    def evaluate(cfg: dict[str, int]):
+        vmem = vmem_of[json.dumps(cfg, sort_keys=True)]
+        runner = spec.make_runner(problem, cfg, interpret)
+        us = float(timer(runner, warmup=warmup, iters=iters))
+        trials.append(Trial(dict(cfg), us, vmem))
+        # maximize -latency; every pre-pruned candidate is feasible
+        return True, -us, {"us": us, "vmem_bytes": vmem}
+
+    search = exhaustive_search([c for c, _ in cands], evaluate)
+    best_cfg, best_us = dict(search.best_x), -search.best_objective
+    _store(path, key, {"config": best_cfg, "us": best_us,
+                       "n_trials": len(trials), "iters": iters,
+                       "vmem_budget": vmem_budget,
+                       "backend": jax.default_backend(),
+                       "t": time.time()})
+    return TuneResult(kernel, key, best_cfg, best_us,
+                      cached=False, trials=trials, search=search)
+
+
+_RESOLVED: dict[tuple, dict[str, int]] = {}   # per-process get_config memo
+
+
+def get_config(kernel: str, problem: dict[str, Any],
+               **tune_kwargs: Any) -> dict[str, int]:
+    """Tuned config for ``problem``; tunes on cache miss.
+
+    After the first call per process the lookup is a pure in-memory dict
+    hit — no candidate enumeration, no file IO, no measurement — so
+    routing every kernel call through here adds no measurable overhead.
+    """
+    memoizable = not tune_kwargs.get("force") \
+        and "timer" not in tune_kwargs
+    memo_key = (kernel, cache_key(kernel, problem),
+                tune_kwargs.get("cache_path"),
+                tune_kwargs.get("max_trials", 16),
+                tune_kwargs.get("vmem_budget", VMEM_BUDGET),
+                tune_kwargs.get("iters", 3))
+    if memoizable and memo_key in _RESOLVED:
+        return _RESOLVED[memo_key]
+    cfg = tune(kernel, problem, **tune_kwargs).config
+    if memoizable:
+        _RESOLVED[memo_key] = cfg
+    return cfg
+
+
+# ------------------------------------------------------- tuned dispatchers
+def tuned_flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                          interpret: bool = False,
+                          cache_path: str | None = None,
+                          **tune_kwargs: Any):
+    cfg = get_config(
+        "flash_attention",
+        flash_attention_problem(q.shape, k.shape, q.dtype,
+                                causal=causal, window=window),
+        cache_path=cache_path, **tune_kwargs)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=interpret, block_q=cfg["block_q"],
+                           block_kv=cfg["block_kv"])
+
+
+def tuned_quant_matmul(x, w, *, interpret: bool = False,
+                       out_dtype=jnp.float32,
+                       cache_path: str | None = None,
+                       **tune_kwargs: Any):
+    cfg = get_config(
+        "quant_matmul",
+        quant_matmul_problem(x.shape, w.shape, x.dtype,
+                             out_dtype=out_dtype),
+        cache_path=cache_path, **tune_kwargs)
+    return quant_matmul(x, w, interpret=interpret, out_dtype=out_dtype,
+                        block_m=cfg["block_m"], block_n=cfg["block_n"],
+                        block_k=cfg["block_k"])
+
+
+def tuned_block_sparse_matmul(x, w, kindex, *, block: int = 128,
+                              interpret: bool = False,
+                              cache_path: str | None = None,
+                              **tune_kwargs: Any):
+    cfg = get_config(
+        "block_sparse_matmul",
+        block_sparse_matmul_problem(x.shape, w.shape, x.dtype,
+                                    max_live=int(kindex.shape[1]),
+                                    block=block),
+        cache_path=cache_path, **tune_kwargs)
+    return block_sparse_matmul(x, w, kindex, block=block,
+                               block_m=cfg["block_m"], interpret=interpret)

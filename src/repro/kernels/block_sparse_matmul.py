@@ -57,16 +57,22 @@ def compact_block_index(block_map: np.ndarray) -> np.ndarray:
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+@functools.partial(jax.jit, static_argnames=("interpret", "block",
+                                             "block_m"))
 def block_sparse_matmul(x: jnp.ndarray, w: jnp.ndarray,
                         kindex: jnp.ndarray, *,
                         block: int = BLOCK,
+                        block_m: int | None = None,
                         interpret: bool = False) -> jnp.ndarray:
     """x: (M, K); w: (K, N) (already masked); kindex: (N/block, max_live)
-    from :func:`compact_block_index`.  Returns x @ w over live blocks."""
+    from :func:`compact_block_index`.  Returns x @ w over live blocks.
+
+    ``block`` is the mask granularity (fixed by the kindex layout);
+    ``block_m`` is the free M-tile dimension (autotuned via
+    kernels/autotune.py)."""
     m, k = x.shape
     _, n = w.shape
-    bm = min(block, m)
+    bm = min(block_m or block, m)
     assert m % bm == 0 and k % block == 0 and n % block == 0
     nb = n // block
     steps = int(kindex.shape[1])

@@ -1,14 +1,22 @@
 """Pallas TPU kernel: flash attention (causal / sliding-window / GQA).
 
 The TPU-optimized form of models/layers.py::mea_attention (same online-
-softmax math; that function is the pure-jnp oracle).  Tiling: q tile 128 x
-kv tile 128; (m, l, acc) live in VMEM scratch across the kv-loop (innermost
-grid dim), so HBM traffic is O(S) per q tile instead of O(S^2) — this is
-what moves the 32k-prefill memory roofline term (EXPERIMENTS.md §Perf).
+softmax math; that function is the pure-jnp oracle).  Tiling: q tile
+``block_q`` x kv tile ``block_kv`` (default 128x128, tunable — see
+kernels/autotune.py); (m, l, acc) live in VMEM scratch across the kv-loop
+(innermost grid dim), so HBM traffic is O(S) per q tile instead of O(S^2) —
+this is what moves the 32k-prefill memory roofline term (EXPERIMENTS.md
+§Perf).
 
 Causal skipping: kv tiles strictly above the diagonal are skipped via
 pl.when (no MXU work is issued), recovering the ~2x causal FLOP saving that
 the naive jnp path wastes.
+
+GQA: q heads are mapped onto their kv head inside the BlockSpec index maps
+(``kv_bh = batch * kv_heads + q_head // group``), so repeated K/V tiles are
+re-read from the *same* HBM block instead of materializing a g-times larger
+repeated tensor (g x HBM traffic + footprint saved vs the old jnp.repeat
+path).
 """
 
 from __future__ import annotations
@@ -78,24 +86,27 @@ def _flash_kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window",
-                                             "interpret"))
+                                             "interpret", "block_q",
+                                             "block_kv"))
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: int = 0,
-                    interpret: bool = False) -> jnp.ndarray:
+                    interpret: bool = False,
+                    block_q: int | None = None,
+                    block_kv: int | None = None) -> jnp.ndarray:
     """q: (B,Sq,H,D); k/v: (B,Skv,KV,D) with H % KV == 0.
-    Returns (B,Sq,H,D)."""
+    Returns (B,Sq,H,D).  ``block_q``/``block_kv`` override the default
+    128x128 tiling (autotuned via kernels/autotune.py)."""
     b, sq, h, d = q.shape
     _, skv, kvh, _ = k.shape
     g = h // kvh
-    if g > 1:
-        k = jnp.repeat(k, g, axis=2)
-        v = jnp.repeat(v, g, axis=2)
-    # fold batch*heads, pad seq to tile multiples
+    # fold batch*heads, pad seq to tile multiples.  K/V keep their kv heads:
+    # the BlockSpec index maps below fold the q-head -> kv-head mapping, so
+    # GQA never materializes repeated K/V in HBM.
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
-    kf = k.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
-    vf = v.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
-    bq = min(BQ, sq)
-    bkv = min(BKV, skv)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
+    bq = min(block_q or BQ, sq)
+    bkv = min(block_kv or BKV, skv)
     pad_q = (-sq) % bq
     pad_kv = (-skv) % bkv
     if pad_q:
@@ -107,6 +118,10 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     kv_steps = skv_p // bkv
     grid = (b * h, sq_p // bq, kv_steps)
 
+    def kv_map(bh, i, j):
+        # bh = batch * h + q_head  ->  batch * kvh + q_head // g
+        return ((bh // h) * kvh + (bh % h) // g, j, 0)
+
     out = pl.pallas_call(
         functools.partial(_flash_kernel, kv_steps=kv_steps,
                           scale=1.0 / math.sqrt(d), causal=causal,
@@ -114,8 +129,8 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
-            pl.BlockSpec((1, bkv, d), lambda bh, i, j: (bh, j, 0)),
-            pl.BlockSpec((1, bkv, d), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, bkv, d), kv_map),
+            pl.BlockSpec((1, bkv, d), kv_map),
         ],
         out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
         out_shape=jax.ShapeDtypeStruct((b * h, sq_p, d), q.dtype),

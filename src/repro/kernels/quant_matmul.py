@@ -8,6 +8,8 @@ dequantization happens once per output tile.
 Tiling: out tile (BM=128, BN=128), contraction loop in BK=512 slabs — MXU
 dims are multiples of 128, the int8 MXU path packs 2x per pass.  Working
 set per grid step: BM*BK + BK*BN int8 + BM*BN int32 ≈ 128KB + 64KB ≪ VMEM.
+All three tile dims are overridable per call (``block_m``/``block_n``/
+``block_k``) and autotuned per shape by kernels/autotune.py.
 
 ``ref.py`` holds the pure-jnp oracle; tests sweep shapes/dtypes with
 interpret=True (CPU).
@@ -47,12 +49,18 @@ def _qmm_kernel(xq_ref, xs_ref, wq_ref, ws_ref, out_ref, acc_ref, *,
                         ).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype",
+                                             "block_m", "block_n",
+                                             "block_k"))
 def quant_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
                  interpret: bool = False,
-                 out_dtype=jnp.float32) -> jnp.ndarray:
+                 out_dtype=jnp.float32,
+                 block_m: int | None = None,
+                 block_n: int | None = None,
+                 block_k: int | None = None) -> jnp.ndarray:
     """x: (M, K) float; w: (K, N) float.  Returns (M, N) ~= x @ w computed
-    through the int8 MXU path."""
+    through the int8 MXU path.  ``block_*`` override the default
+    (128, 128, 512) tiling (autotuned via kernels/autotune.py)."""
     m, k = x.shape
     k2, n = w.shape
     assert k == k2
@@ -66,8 +74,8 @@ def quant_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
         / 127.0
     wq = jnp.clip(jnp.round(wf / ws), -127, 127).astype(jnp.int8)
 
-    bm, bn = min(BM, m), min(BN, n)
-    bk = min(BK, k)
+    bm, bn = min(block_m or BM, m), min(block_n or BN, n)
+    bk = min(block_k or BK, k)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
         f"shapes ({m},{k})x({k},{n}) not tileable by ({bm},{bn},{bk})"
     k_steps = k // bk

@@ -1,0 +1,305 @@
+"""Autotuner: cache round-trip, constraint pruning, tuned-config
+equivalence, and the TUNE O-task's SearchStep trace."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metamodel import MetaModel
+from repro.core.search import exhaustive_search
+from repro.kernels import autotune, ref
+from repro.kernels.block_sparse_matmul import (block_sparse_matmul,
+                                               compact_block_index)
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quant_matmul import quant_matmul
+from repro.sparsity.masks import block_map, block_mask
+
+KEY = jax.random.PRNGKey(0)
+QMM_PROBLEM = autotune.quant_matmul_problem((128, 256), (256, 128),
+                                            "float32")
+
+
+@pytest.fixture
+def cache_path(tmp_path):
+    autotune.clear_memory_cache()
+    yield str(tmp_path / "autotune.json")
+    autotune.clear_memory_cache()
+
+
+def fake_timer(schedule):
+    """Timer returning scripted µs per config (no kernels executed)."""
+    calls = []
+
+    def timer(fn, *, warmup, iters):
+        calls.append(fn)
+        return schedule(len(calls))
+
+    timer.calls = calls
+    return timer
+
+
+class TestCache:
+    def test_roundtrip_second_call_hits_disk(self, cache_path):
+        timer = fake_timer(lambda n: 100.0 + n)
+        res = autotune.tune("quant_matmul", QMM_PROBLEM,
+                            cache_path=cache_path, timer=timer,
+                            max_trials=4)
+        assert not res.cached and len(timer.calls) == 4
+        # winner is the first (lowest scripted time) candidate
+        assert res.us == 101.0
+
+        # same process: in-memory hit, timer untouched
+        res2 = autotune.tune("quant_matmul", QMM_PROBLEM,
+                             cache_path=cache_path, timer=timer,
+                             max_trials=4)
+        assert res2.cached and res2.config == res.config
+        assert len(timer.calls) == 4
+
+        # fresh process (memory cache dropped): disk hit, no re-measure
+        autotune.clear_memory_cache()
+        res3 = autotune.tune("quant_matmul", QMM_PROBLEM,
+                             cache_path=cache_path, timer=timer,
+                             max_trials=4)
+        assert res3.cached and res3.config == res.config
+        assert len(timer.calls) == 4
+
+    def test_cache_file_format(self, cache_path):
+        autotune.tune("quant_matmul", QMM_PROBLEM, cache_path=cache_path,
+                      timer=fake_timer(lambda n: float(n)), max_trials=2)
+        with open(cache_path) as f:
+            data = json.load(f)
+        assert data["version"] == autotune.CACHE_VERSION
+        key = autotune.cache_key("quant_matmul", QMM_PROBLEM)
+        entry = data["entries"][key]
+        assert set(entry) >= {"config", "us", "n_trials", "backend"}
+
+    def test_force_remeasures(self, cache_path):
+        timer = fake_timer(lambda n: float(n))
+        autotune.tune("quant_matmul", QMM_PROBLEM, cache_path=cache_path,
+                      timer=timer, max_trials=2)
+        autotune.tune("quant_matmul", QMM_PROBLEM, cache_path=cache_path,
+                      timer=timer, max_trials=2, force=True)
+        assert len(timer.calls) == 4
+
+    def test_deeper_search_refreshes_shallow_entry(self, cache_path):
+        timer = fake_timer(lambda n: float(n))
+        autotune.tune("quant_matmul", QMM_PROBLEM, cache_path=cache_path,
+                      timer=timer, max_trials=2)
+        # same depth: hit; deeper request: the shallow entry is not
+        # evidence, so the search re-runs and overwrites
+        hit = autotune.tune("quant_matmul", QMM_PROBLEM,
+                            cache_path=cache_path, timer=timer,
+                            max_trials=2)
+        assert hit.cached and len(timer.calls) == 2
+        deep = autotune.tune("quant_matmul", QMM_PROBLEM,
+                             cache_path=cache_path, timer=timer,
+                             max_trials=6)
+        assert not deep.cached and len(timer.calls) == 8
+        # and the refreshed (deeper) entry now serves shallow requests
+        again = autotune.tune("quant_matmul", QMM_PROBLEM,
+                              cache_path=cache_path, timer=timer,
+                              max_trials=2)
+        assert again.cached and len(timer.calls) == 8
+
+    def test_other_backend_entry_is_a_miss(self, cache_path):
+        timer = fake_timer(lambda n: float(n))
+        autotune.tune("quant_matmul", QMM_PROBLEM, cache_path=cache_path,
+                      timer=timer, max_trials=2)
+        data = json.load(open(cache_path))
+        key = autotune.cache_key("quant_matmul", QMM_PROBLEM)
+        data["entries"][key]["backend"] = "tpu"   # tuned elsewhere
+        with open(cache_path, "w") as f:
+            json.dump(data, f)
+        autotune.clear_memory_cache()
+        res = autotune.tune("quant_matmul", QMM_PROBLEM,
+                            cache_path=cache_path, timer=timer,
+                            max_trials=2)
+        assert not res.cached and len(timer.calls) == 4  # re-measured
+
+    def test_distinct_problems_distinct_keys(self):
+        other = autotune.quant_matmul_problem((128, 256), (256, 128),
+                                              "bfloat16")
+        assert (autotune.cache_key("quant_matmul", QMM_PROBLEM)
+                != autotune.cache_key("quant_matmul", other))
+
+
+class TestConstraintPruning:
+    def test_all_candidates_within_budget(self):
+        budget = 300_000
+        for kernel, problem in [
+            ("quant_matmul", QMM_PROBLEM),
+            ("flash_attention", autotune.flash_attention_problem(
+                (1, 256, 2, 64), (1, 256, 2, 64), "float32")),
+            ("block_sparse_matmul", autotune.block_sparse_matmul_problem(
+                (256, 512), (512, 512), "float32", max_live=4)),
+        ]:
+            cands = autotune.enumerate_candidates(kernel, problem,
+                                                  vmem_budget=budget)
+            assert cands, kernel
+            assert all(v <= budget for _, v in cands), kernel
+
+    def test_over_budget_candidate_never_timed(self, cache_path):
+        budget = 200_000  # prunes the largest (bm, bn, bk) combinations
+        timed = []
+
+        def timer(fn, *, warmup, iters):
+            timed.append(fn)
+            return 1.0
+
+        autotune.tune("quant_matmul", QMM_PROBLEM, cache_path=cache_path,
+                      timer=timer, vmem_budget=budget, max_trials=None)
+        allowed = len(autotune.enumerate_candidates(
+            "quant_matmul", QMM_PROBLEM, vmem_budget=budget))
+        full = len(autotune.enumerate_candidates(
+            "quant_matmul", QMM_PROBLEM, vmem_budget=2 ** 60))
+        assert len(timed) == allowed < full
+
+    def test_divisibility_pruning(self):
+        # n=384 is not divisible by 256: no candidate may use block_n=256
+        prob = autotune.quant_matmul_problem((128, 512), (512, 384),
+                                             "float32")
+        cands = autotune.enumerate_candidates("quant_matmul", prob)
+        assert all(c["block_n"] != 256 for c, _ in cands)
+
+    def test_no_feasible_candidate_raises(self, cache_path):
+        with pytest.raises(ValueError):
+            autotune.tune("quant_matmul", QMM_PROBLEM,
+                          cache_path=cache_path, vmem_budget=1)
+
+    def test_small_dims_keep_literal_default_config(self):
+        # dims < 128 clamp several nominal tiles together; the surviving
+        # representative must be the literal default so default_us exists
+        prob = autotune.flash_attention_problem((1, 64, 2, 32),
+                                                (1, 64, 2, 32), "float32")
+        cands = autotune.enumerate_candidates("flash_attention", prob)
+        assert {"block_q": 128, "block_kv": 128} in [c for c, _ in cands]
+
+    def test_default_config_survives_trial_cap(self):
+        prob = autotune.quant_matmul_problem((512, 1024), (1024, 512),
+                                             "float32")
+        cands = autotune.enumerate_candidates("quant_matmul", prob,
+                                              max_trials=4)
+        assert cands[0][0] == autotune.KERNELS["quant_matmul"].default_config
+
+
+class TestTunedConfigEquivalence:
+    """Non-default tile configs still match the kernels/ref.py oracles."""
+
+    @pytest.mark.parametrize("cfg", [dict(block_m=64, block_n=64,
+                                          block_k=128),
+                                     dict(block_m=32, block_n=256,
+                                          block_k=64)])
+    def test_quant_matmul(self, cfg):
+        x = jax.random.normal(KEY, (128, 512))
+        w = jax.random.normal(jax.random.PRNGKey(1), (512, 256))
+        y = quant_matmul(x, w, interpret=True, **cfg)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(ref.quant_matmul_ref(x, w)),
+            rtol=1e-4, atol=1e-3)
+
+    @pytest.mark.parametrize("cfg", [dict(block_q=64, block_kv=32),
+                                     dict(block_q=32, block_kv=128)])
+    @pytest.mark.parametrize("kv_heads", [1, 2])
+    def test_flash_attention(self, cfg, kv_heads):
+        b, s, h, d = 1, 192, 4, 32
+        q = jax.random.normal(KEY, (b, s, h, d))
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv_heads, d))
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv_heads, d))
+        y = flash_attention(q, k, v, causal=True, interpret=True, **cfg)
+        r = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                                   rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("block_m", [32, 64])
+    def test_block_sparse_matmul(self, block_m):
+        m, k, n = 256, 512, 384
+        x = jax.random.normal(KEY, (m, k))
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+        mask = block_mask(w, rate=0.5, block=128)
+        wm = w * mask
+        kidx = jnp.asarray(compact_block_index(
+            block_map(np.asarray(mask), 128)))
+        y = block_sparse_matmul(x, wm, kidx, block_m=block_m,
+                                interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(ref.block_sparse_matmul_ref(x, wm)),
+            rtol=1e-4, atol=1e-3)
+
+    def test_tuned_dispatcher_matches_ref(self, cache_path):
+        x = jax.random.normal(KEY, (128, 256))
+        w = jax.random.normal(jax.random.PRNGKey(1), (256, 128))
+        y = autotune.tuned_quant_matmul(x, w, interpret=True,
+                                        cache_path=cache_path,
+                                        max_trials=2, iters=1)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(ref.quant_matmul_ref(x, w)),
+            rtol=1e-4, atol=1e-3)
+
+
+class TestExhaustiveSearch:
+    def test_picks_max_objective_with_trace(self):
+        seen = []
+
+        def evaluate(x):
+            seen.append(x)
+            return x != 3, -abs(x - 3), {}
+
+        res = exhaustive_search([1, 2, 3, 4], evaluate)
+        assert res.best_x == 2 and seen == [1, 2, 3, 4]
+        assert [s.step for s in res.steps] == [1, 2, 3, 4]
+
+
+class TestTuneTask:
+    def test_flow_records_searchsteps(self, cache_path):
+        from repro.core.flow import DesignFlow
+        from repro.tasks.model_gen import ModelGen
+        from repro.tasks.tune import Tune
+
+        flow = DesignFlow("tune-test")
+        flow.chain(ModelGen(model="jet_dnn", train_en=False),
+                   Tune(max_trials=2, iters=1, max_problems=1,
+                        cache_path=cache_path))
+        meta = flow.execute(MetaModel())
+        probes = meta.trace("tune.probe")
+        assert len(probes) == 2          # one SearchStep per measured config
+        assert all("config" in p and "us" in p for p in probes)
+        art = meta.latest("dnn")
+        assert art.name.endswith("+T#2")
+        configs = art.payload.meta["tile_configs"]
+        assert configs and meta.get("tune.result")["configs"] == configs
+        assert art.metrics["tune.search_steps"] == 2
+
+        # second execution: cache hit -> single cached probe step
+        flow2 = DesignFlow("tune-test-2")
+        flow2.chain(ModelGen(model="jet_dnn", train_en=False),
+                    Tune(max_trials=2, iters=1, max_problems=1,
+                         cache_path=cache_path))
+        meta2 = flow2.execute(MetaModel())
+        probes2 = meta2.trace("tune.probe")
+        assert len(probes2) == 1 and probes2[0].get("cached")
+
+    def test_derive_problems_lm(self, cache_path):
+        from repro.tasks.tune import derive_problems
+        from repro.tasks.handle import DNNHandle
+
+        class _Cfg:
+            n_heads, n_kv_heads, d_model, head_dim = 4, 2, 128, 0
+
+            @property
+            def hd(self):
+                return 32
+
+        class _Model:
+            cfg = _Cfg()
+
+        handle = DNNHandle(kind="lm", name="toy",
+                           params={"w": jnp.zeros((128, 128))},
+                           model=_Model())
+        probs = derive_problems(handle, max_problems=4)
+        kernels = {p["kernel"] for p in probs}
+        assert "flash_attention" in kernels
+        fa = next(p for p in probs if p["kernel"] == "flash_attention")
+        assert fa["kv_heads"] == 2 and fa["h"] == 4

@@ -3,7 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip cleanly when absent
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.search import binary_search_max
 from repro.models.common import apply_rope
