@@ -1,0 +1,143 @@
+"""Serving-path benchmark: prefill vs decode tokens/s across decode
+execution variants.
+
+Three variants per smoke shape, all generating identical greedy tokens:
+
+- ``loop_jnp``    — the seed path: per-token Python loop, jnp decode
+                    attention (one host round-trip + dispatch per token);
+- ``scan_jnp``    — the fused path: all decode steps in one
+                    ``jax.lax.scan`` dispatch, jnp decode attention;
+- ``scan_kernel`` — fused scan + the flash_decode Pallas kernel
+                    (interpret mode on CPU; Mosaic on TPU).
+
+Compile/warmup runs before any timed region and prefill is timed apart
+from decode (launch/serve.py::timed_generate), so the rows are pure
+serving-trajectory numbers.  The shape grid covers the two decode cache
+layouts: linear (qwen2 GQA) and sliding-window ring buffer (danube).
+
+Rows land in ``benchmarks/results/serve_bench.json`` with a
+``not_slower_than_seed`` verdict per shape: the scan'd flash-decode path
+must never lose to the seed Python-loop jnp path.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from benchmarks.common import emit, save_json
+except ImportError:
+    from common import emit, save_json
+
+# (arch, batch, prompt_len, gen): one linear-cache GQA arch, one
+# sliding-window ring-buffer arch — the two decode masking regimes.
+SERVE_SHAPES = [
+    ("qwen2-7b", 2, 32, 16),
+    ("h2o-danube-3-4b", 2, 32, 16),
+]
+
+VARIANTS = {                      # name -> (scan, kernels)
+    "loop_jnp": (False, False),
+    "scan_jnp": (True, False),
+    "scan_kernel": (True, True),
+}
+ITERS = 3
+
+
+def _bench_shape(arch: str, batch: int, prompt_len: int, gen: int) -> dict:
+    from repro.configs.registry import get_config
+    from repro.data.synthetic import lm_tokens
+    from repro.launch.serve import generate, make_serve_fns, timed_generate
+    from repro.models.api import build_model
+
+    cfg = get_config(arch, smoke=True)
+    prompts = jnp.asarray(lm_tokens(batch * prompt_len, cfg.vocab_size,
+                                    seed=1).reshape(batch, prompt_len))
+    cache_len = prompt_len + gen + 1
+    interpret = jax.default_backend() != "tpu"
+    row: dict = {"arch": cfg.name, "batch": batch,
+                 "prompt_len": prompt_len, "gen": gen}
+
+    # loop/scan is a call-time choice, so the two jnp variants share one
+    # model + jitted fns; params are model-independent given the config
+    models = {False: build_model(cfg),
+              True: build_model(cfg, use_kernels=True,
+                                interpret=interpret)}
+    params = models[False].init(jax.random.PRNGKey(0))
+    fns = {k: make_serve_fns(m) for k, m in models.items()}
+
+    tokens = {}
+    for name, (scan, kernels) in VARIANTS.items():
+        model = models[kernels]
+        out = generate(model, params, prompts, gen, cache_len,
+                       scan=scan, fns=fns[kernels])  # compile (untimed)
+        tokens[name] = [list(map(int, r)) for r in out.tolist()]
+        best = None
+        for _ in range(ITERS):
+            _, t = timed_generate(model, params, prompts, gen, cache_len,
+                                  scan=scan, fns=fns[kernels])
+            best = t if best is None else {
+                k: min(best[k], t[k]) for k in t}
+        row[name] = {
+            "prefill_s": best["prefill_s"],
+            "decode_s": best["decode_s"],
+            "prefill_tokens_per_s":
+                batch * prompt_len / max(best["prefill_s"], 1e-9),
+            "decode_tokens_per_s":
+                batch * (gen - 1) / max(best["decode_s"], 1e-9),
+        }
+
+    # all variants must decode the same greedy tokens — the full (B, gen)
+    # grid, not a truncated sample
+    row["samples_agree"] = len({tuple(map(tuple, t))
+                                for t in tokens.values()}) == 1
+    row["sample"] = tokens["scan_kernel"][0][:8]
+    base = row["loop_jnp"]["decode_tokens_per_s"]
+    for name in ("scan_jnp", "scan_kernel"):
+        row[name]["speedup_vs_loop_jnp"] = \
+            row[name]["decode_tokens_per_s"] / max(base, 1e-9)
+    row["not_slower_than_seed"] = \
+        row["scan_kernel"]["decode_tokens_per_s"] >= base
+    return row
+
+
+def main():
+    results = {"backend": jax.default_backend(), "t": time.time(),
+               "shapes": []}
+    for arch, batch, prompt_len, gen in SERVE_SHAPES:
+        row = _bench_shape(arch, batch, prompt_len, gen)
+        results["shapes"].append(row)
+        tag = f"serve_{row['arch']}"
+        emit(f"{tag}_prefill", row["loop_jnp"]["prefill_s"] * 1e6,
+             f"prefill_tok_s="
+             f"{row['loop_jnp']['prefill_tokens_per_s']:.1f}")
+        for name in VARIANTS:
+            v = row[name]
+            derived = f"decode_tok_s={v['decode_tokens_per_s']:.1f}"
+            if name != "loop_jnp":
+                derived += (f";vs_loop_jnp="
+                            f"{v['speedup_vs_loop_jnp']:.2f}x")
+            emit(f"{tag}_decode_{name}", v["decode_s"] * 1e6, derived)
+        emit(f"{tag}_verdict", 0.0,
+             f"not_slower_than_seed={int(row['not_slower_than_seed'])};"
+             f"samples_agree={int(row['samples_agree'])}")
+    save_json("serve_bench.json", results)
+    # the speed verdict gates CI, it is not just an artifact field.
+    # samples_agree is reported but not gated: greedy argmax can
+    # legitimately flip on float-reduction-order ties between the kernel
+    # and the oracle — numerical equivalence is pinned (with tolerances)
+    # by tests/test_decode_kernel.py, the right tool for that claim.
+    slow = [r["arch"] for r in results["shapes"]
+            if not r["not_slower_than_seed"]]
+    if slow:
+        raise SystemExit(f"serve bench regression on {slow}: the scan'd "
+                         f"flash-decode path must never be slower than "
+                         f"the seed Python-loop jnp path")
+    return results
+
+
+if __name__ == "__main__":
+    main()

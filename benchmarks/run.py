@@ -6,11 +6,14 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_table2   -> Table II (strategy comparison, resource proxies)
   bench_kernels  -> kernel micro-benchmarks (tuned-vs-default tiles)
   bench_roofline -> §Roofline rows from the dry-run sweeps
+  bench_serve    -> serving trajectory (prefill/decode tok/s; scan'd
+                    flash-decode vs the seed Python-loop jnp path)
 
 Usage: ``python benchmarks/run.py [suite ...]`` where suite is any of
-pruning/combined/table2/kernels/roofline (default: all).  CI runs
-``run.py kernels`` as the smoke suite; the kernel autotuner persists its
-tile cache at $REPRO_AUTOTUNE_CACHE so warm runs skip the tile search.
+pruning/combined/table2/kernels/roofline/serve (default: all).  CI runs
+``run.py kernels`` and ``run.py serve`` as the smoke suites; the kernel
+autotuner persists its tile cache at $REPRO_AUTOTUNE_CACHE so warm runs
+skip the tile search.
 """
 import sys
 
@@ -19,10 +22,10 @@ def main(argv: list[str] | None = None) -> None:
     if "benchmarks" not in sys.modules:
         sys.path.insert(0, __file__.rsplit("/", 2)[0])
     from benchmarks import (bench_combined, bench_kernels, bench_pruning,
-                            bench_roofline, bench_table2)
+                            bench_roofline, bench_serve, bench_table2)
     suites = {"pruning": bench_pruning, "combined": bench_combined,
               "table2": bench_table2, "kernels": bench_kernels,
-              "roofline": bench_roofline}
+              "roofline": bench_roofline, "serve": bench_serve}
     picked = argv if argv else list(suites)
     unknown = [s for s in picked if s not in suites]
     if unknown:

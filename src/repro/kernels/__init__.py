@@ -5,18 +5,20 @@
 from repro.kernels.block_sparse_matmul import (block_sparse_matmul,
                                                compact_block_index)
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
 from repro.kernels.quant_matmul import quant_matmul
 
 __all__ = ["block_sparse_matmul", "compact_block_index", "flash_attention",
-           "quant_matmul", "tuned_block_sparse_matmul",
-           "tuned_flash_attention", "tuned_quant_matmul"]
+           "flash_decode", "quant_matmul", "tuned_block_sparse_matmul",
+           "tuned_flash_attention", "tuned_flash_decode",
+           "tuned_quant_matmul"]
 
 
 def __getattr__(name):
     # tuned_* dispatchers pull in core.search; import lazily so plain
     # kernel users don't pay for the autotune machinery.
     if name in ("tuned_block_sparse_matmul", "tuned_flash_attention",
-                "tuned_quant_matmul"):
+                "tuned_flash_decode", "tuned_quant_matmul"):
         from repro.kernels import autotune
         return getattr(autotune, name)
     raise AttributeError(name)

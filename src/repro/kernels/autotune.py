@@ -51,6 +51,7 @@ import numpy as np
 from repro.core.search import SearchResult, exhaustive_search
 from repro.kernels.block_sparse_matmul import block_sparse_matmul
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode, pick_block_kv
 from repro.kernels.quant_matmul import BK, BM, BN, quant_matmul
 
 TILE_SIZES = (32, 64, 128, 256)
@@ -232,6 +233,66 @@ def flash_attention_problem(q_shape, kv_shape, dtype, *,
             "window": int(window)}
 
 
+# flash decode ---------------------------------------------------------------
+def _fd_vmem(problem: dict[str, Any], cfg: dict[str, int]) -> int:
+    d = problem["d"]
+    g = problem["h"] // problem["kv_heads"]
+    bkv = pick_block_kv(cfg["block_kv"], problem["cache_len"])
+    item = _itemsize(problem["dtype"])
+    blocks = (2 * g * d + 2 * bkv * d) * item       # q, out, k, v tiles
+    mask = bkv * 4                                  # int32 validity tile
+    scratch = (2 * g + g * d) * 4                   # m, l, acc (f32)
+    temps = 2 * g * bkv * 4                         # s and p (f32)
+    return blocks + mask + scratch + temps
+
+
+def _fd_candidates(problem: dict[str, Any]
+                   ) -> list[tuple[dict[str, int], int]]:
+    # block_kv IS the kv-split: cache_len / block_kv partial-softmax steps.
+    # 512 joins the space for long caches where fewer, fatter tiles win.
+    out, seen = [], set()
+    for bkv in _axis(128, (512,)):
+        cfg = {"block_kv": bkv}
+        # dedup on the divisor-safe effective tile the kernel will run
+        # (clamping and ragged-snap both collapse nominal candidates)
+        eff = pick_block_kv(bkv, problem["cache_len"])
+        if eff in seen:
+            continue
+        seen.add(eff)
+        out.append((cfg, _fd_vmem(problem, cfg)))
+    return out
+
+
+@functools.lru_cache(maxsize=8)
+def _fd_inputs(problem_json: str):
+    problem = json.loads(problem_json)
+    dtype = jnp.dtype(problem["dtype"])
+    b, h, d = problem["b"], problem["h"], problem["d"]
+    kvh, skv = problem["kv_heads"], problem["cache_len"]
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, 1, h, d)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1),
+                          (b, skv, kvh, d)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2),
+                          (b, skv, kvh, d)).astype(dtype)
+    # a full cache is the steady-state (and worst-case) decode problem
+    mask = jnp.ones((skv,), jnp.bool_)
+    return q, k, v, mask
+
+
+def _fd_runner(problem: dict[str, Any], cfg: dict[str, int],
+               interpret: bool) -> Callable[[], Any]:
+    q, k, v, mask = _fd_inputs(json.dumps(problem, sort_keys=True))
+    return lambda: flash_decode(q, k, v, mask, interpret=interpret,
+                                block_kv=cfg["block_kv"])
+
+
+def flash_decode_problem(q_shape, kv_shape, dtype) -> dict[str, Any]:
+    b, _, h, d = (int(x) for x in q_shape)
+    _, skv, kvh, _ = (int(x) for x in kv_shape)
+    return {"b": b, "h": h, "d": d, "kv_heads": kvh, "cache_len": skv,
+            "dtype": jnp.dtype(dtype).name}
+
+
 # quant matmul ---------------------------------------------------------------
 def _qmm_vmem(problem: dict[str, Any], cfg: dict[str, int]) -> int:
     bm = min(cfg["block_m"], problem["m"])
@@ -342,6 +403,9 @@ KERNELS: dict[str, KernelEntry] = {
     "flash_attention": KernelEntry(
         "flash_attention", {"block_q": 128, "block_kv": 128},
         _fa_candidates, _fa_runner),
+    "flash_decode": KernelEntry(
+        "flash_decode", {"block_kv": 128},
+        _fd_candidates, _fd_runner),
     "quant_matmul": KernelEntry(
         "quant_matmul", {"block_m": BM, "block_n": BN, "block_k": BK},
         _qmm_candidates, _qmm_runner),
@@ -468,6 +532,54 @@ def tune(kernel: str, problem: dict[str, Any], *,
                       cached=False, trials=trials, search=search)
 
 
+def cached_config(kernel: str, problem: dict[str, Any], *,
+                  cache_path: str | None = None,
+                  relax: tuple[str, ...] = ()) -> dict[str, int]:
+    """Persisted tuned config for ``problem``, or the kernel default.
+
+    Never tunes and never times — a pure (memoized) cache read, so it is
+    safe on a model's trace path: layers consult it per kernel call to
+    pick up whatever the TUNE task / ``tuned_*`` wrappers persisted,
+    falling back to the default config on a miss or a backend mismatch.
+
+    ``relax``: problem fields allowed to differ on fallback matching.  A
+    TUNE run keys its decode problem on the arch's nominal cache length
+    and a proxy batch, while serving builds ``prompt+gen+1``-length caches
+    at the actual batch — relaxing ("b", "cache_len") lets the nearest
+    tuned entry (log-distance over the relaxed dims) stand in, so tuning
+    wins still reach serving shapes TUNE never saw exactly.  Configs stay
+    valid across the relaxation because kernels clamp tiles to the
+    problem dims.
+    """
+    path = cache_path or default_cache_path()
+    entries = _load(path)["entries"]
+    entry = entries.get(cache_key(kernel, problem))
+    if entry is not None and entry.get("backend") == jax.default_backend():
+        return dict(entry["config"])
+    if relax:
+        strict = {k: v for k, v in problem.items() if k not in relax}
+        prefix = f"{kernel}|"
+        best: tuple[float, dict[str, Any]] | None = None
+        for key, e in entries.items():
+            if not key.startswith(prefix) or \
+                    e.get("backend") != jax.default_backend():
+                continue
+            try:
+                p = json.loads(key[len(prefix):])
+            except ValueError:      # pragma: no cover - corrupt entry
+                continue
+            if {k: v for k, v in p.items() if k not in relax} != strict:
+                continue
+            dist = sum(abs(math.log(max(float(p.get(f, 1)), 1.0))
+                           - math.log(max(float(problem.get(f, 1)), 1.0)))
+                       for f in relax)
+            if best is None or dist < best[0]:
+                best = (dist, e)
+        if best is not None:
+            return dict(best[1]["config"])
+    return dict(KERNELS[kernel].default_config)
+
+
 _RESOLVED: dict[tuple, dict[str, int]] = {}   # per-process get_config memo
 
 
@@ -507,6 +619,17 @@ def tuned_flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return flash_attention(q, k, v, causal=causal, window=window,
                            interpret=interpret, block_q=cfg["block_q"],
                            block_kv=cfg["block_kv"])
+
+
+def tuned_flash_decode(q, k, v, mask, *, interpret: bool = False,
+                       cache_path: str | None = None,
+                       **tune_kwargs: Any):
+    cfg = get_config(
+        "flash_decode",
+        flash_decode_problem(q.shape, k.shape, q.dtype),
+        cache_path=cache_path, **tune_kwargs)
+    return flash_decode(q, k, v, mask, interpret=interpret,
+                        block_kv=cfg["block_kv"])
 
 
 def tuned_quant_matmul(x, w, *, interpret: bool = False,

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: flash-decoding attention for one generated token.
+
+The decode-side mirror of kernels/flash_attention.py: a single query
+position attends over the whole KV cache.  The cache sequence axis is
+split into ``block_kv`` tiles (the kv-split grid of flash-decoding) and
+the innermost grid dimension reduces them with the partial-softmax
+(m, l, acc) carry held in VMEM scratch, so HBM reads the cache exactly
+once per step regardless of the split.  K/V are consumed in their native
+``(B, L, KV, D)`` cache layout via the BlockSpec index maps — no
+transposed or repeated copy of the cache is ever materialized.  Requested
+splits are snapped divisor-safe (:func:`pick_block_kv`), so the pad-tail
+cache copy only exists for caches too long to take in a single tile whose
+length no candidate divides.
+
+GQA: instead of expanding K/V ``g = H // KV`` times (the jnp oracle's
+``_expand_kv``/``jnp.repeat``, which copies the cache g x per generated
+token), the q heads sharing one kv head are folded into the *rows* of the
+q tile: q is reshaped ``(B, H, D) -> (B, KV, g, D)`` (pure metadata) so
+each grid cell computes a ``(g, block_kv)`` score panel against a K/V
+tile that is read from HBM once.
+
+Masking: the kernel takes a precomputed ``(L,)`` validity mask instead of
+deriving positions internally.  Callers build it from
+``models/layers.py::kv_positions_for_cache`` — the one place that knows
+how to recover absolute positions from both the linear cache and the
+sliding-window ring buffer — so the kernel and the jnp oracle can never
+disagree about which slots are live.  Tiles with no live slot skip their
+MXU work entirely (``pl.when``), which prunes the empty tail of a
+freshly-prefilled linear cache.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+BKV = 128
+MAX_SINGLE_TILE = 1024
+
+
+def pick_block_kv(block_kv: int | None, skv: int) -> int:
+    """Divisor-safe kv-split for a cache of length ``skv``.
+
+    A ragged split pads a fresh copy of the whole cache on every decode
+    step (the cache changes per step, so the pad cannot be hoisted out of
+    the generation scan).  Snap instead: clamp to the cache length, and
+    when the tile still does not divide, take the cache in one tile if
+    that fits comfortably in VMEM — only a giant ragged cache ever pays
+    the pad-tail copy.
+    """
+    bkv = min(block_kv or BKV, skv)
+    if skv % bkv == 0:
+        return bkv
+    if skv <= MAX_SINGLE_TILE:
+        return skv
+    return bkv
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, out_ref,
+                   m_ref, l_ref, acc_ref, *, kv_steps: int, scale: float):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = mask_ref[...] != 0                          # (1, bkv)
+
+    @pl.when(jnp.any(live))
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale    # (g, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (bkv, d)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = jnp.where(live, s, NEG_INF)                # (g, bkv)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == kv_steps - 1)
+    def _finish():
+        out_ref[0, 0] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)).astype(
+                             out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_kv"))
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 mask: jnp.ndarray, *, interpret: bool = False,
+                 block_kv: int | None = None) -> jnp.ndarray:
+    """q: (B,1,H,D); k/v: (B,L,KV,D) with H % KV == 0; mask: (L,) bool —
+    True where the cache slot participates (shared across the batch: the
+    decode position is a scalar).  Returns (B,1,H,D).  ``block_kv`` sets
+    the kv-split tile (autotuned via kernels/autotune.py)."""
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    assert sq == 1, f"flash_decode is single-token (got sq={sq})"
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    bkv = pick_block_kv(block_kv, skv)
+    pad = (-skv) % bkv
+    # group q heads by their kv head: rows of one q tile share a K/V tile
+    qf = q[:, 0].reshape(b, kvh, g, d)
+    mf = mask.astype(jnp.int32).reshape(1, skv)
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        mf = jnp.pad(mf, ((0, 0), (0, pad)))           # padding is masked
+    kv_steps = (skv + pad) // bkv
+    grid = (b, kvh, kv_steps)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, kv_steps=kv_steps,
+                          scale=1.0 / math.sqrt(d)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, kv, j: (bi, kv, 0, 0)),
+            pl.BlockSpec((1, bkv, 1, d), lambda bi, kv, j: (bi, j, kv, 0)),
+            pl.BlockSpec((1, bkv, 1, d), lambda bi, kv, j: (bi, j, kv, 0)),
+            pl.BlockSpec((1, bkv), lambda bi, kv, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, kv, j: (bi, kv, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, k, v, mf)
+    return out.reshape(b, 1, h, d)

@@ -12,7 +12,11 @@ Attention has two execution paths:
 - decode: single-token attention against a KV cache.  Caches shard their
   *sequence* axis over the ``model`` mesh axis (flash-decoding style):
   GSPMD turns the softmax/combine reductions into tiny cross-shard
-  collectives instead of all-gathering the cache.
+  collectives instead of all-gathering the cache.  Under
+  ``ctx.use_kernels`` (and an unsharded cache sequence axis) decode runs
+  in the flash_decode Pallas kernel (kernels/flash_decode.py) — kv-split
+  partial softmax, GQA without K/V expansion; the jnp path stays as its
+  oracle and as the path GSPMD partitions when the cache is seq-sharded.
 """
 
 from __future__ import annotations
@@ -91,6 +95,37 @@ def _expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
     b, s, kvh, hd = k.shape
     g = n_heads // kvh
     return jnp.repeat(k, g, axis=2) if g > 1 else k
+
+
+def kv_positions_for_cache(pos, cache_len: int,
+                           sliding_window: int) -> jnp.ndarray:
+    """Absolute position held by each decode-cache slot (2**30 = empty).
+
+    Linear cache: slot i holds position i for i <= pos.  Sliding-window
+    ring buffer: the current token lands at ``pos % cache_len`` and older
+    slots wrap, so absolute positions are recovered from the write index;
+    slots that would map to negative positions were never written.
+
+    The single source of truth for cache-slot positions — shared by the
+    jnp decode oracle and the flash_decode kernel's mask construction so
+    the two paths cannot drift.
+    """
+    slot = jnp.arange(cache_len)
+    if sliding_window:
+        idx = pos % cache_len
+        kv_pos = jnp.where(slot <= idx, pos - idx + slot,
+                           pos - idx - cache_len + slot)
+        return jnp.where(kv_pos >= 0, kv_pos, 2**30)
+    return jnp.where(slot <= pos, slot, 2**30)
+
+
+def decode_attention_mask(kv_pos: jnp.ndarray, pos,
+                          sliding_window: int) -> jnp.ndarray:
+    """(cache_len,) bool: which cache slots the token at ``pos`` attends."""
+    mask = (kv_pos <= pos) & (kv_pos < 2**30)
+    if sliding_window:
+        mask &= (pos - kv_pos) < sliding_window
+    return mask
 
 
 def mea_attention(q, k, v, q_positions, kv_positions, *,
@@ -198,26 +233,41 @@ def attention(ctx: Ctx, cfg: ArchConfig, p, x, positions,
         cv = jax.lax.dynamic_update_slice(
             cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
         new_cache = {"k": ck, "v": cv, "pos": pos + s}
-        slot = jnp.arange(cache_len)
-        if cfg.sliding_window:
-            # ring buffer: recover absolute position of each slot
-            kv_pos = jnp.where(slot <= idx, pos - idx + slot,
-                               pos - idx - cache_len + slot)
-            kv_pos = jnp.where(kv_pos >= 0, kv_pos, 2**30)
+        kv_pos = kv_positions_for_cache(pos, cache_len, cfg.sliding_window)
+        mask = decode_attention_mask(kv_pos, pos, cfg.sliding_window)
+        # the pallas_call carries no partitioning rule, so the kernel only
+        # dispatches when the cache's sequence axis is unsharded; a
+        # model-axis-sharded cache keeps the jnp path, whose reductions
+        # GSPMD turns into the flash-decoding cross-shard collectives
+        seq_sharded = (ctx.mesh is not None
+                       and "model" in ctx.mesh.axis_names
+                       and _axis_size(ctx.mesh, "model") > 1)
+        if ctx.use_kernels and s == 1 and not seq_sharded:
+            # flash-decoding Pallas kernel: kv-split partial softmax, GQA
+            # without the g x K/V copies of _expand_kv.  The kv-split
+            # comes from the autotuner's persisted cache when TUNE has
+            # covered this decode shape — nearest tuned cache length
+            # stands in otherwise (a pure cache read — no tuning happens
+            # on the trace path).
+            from repro.kernels import autotune
+            from repro.kernels.flash_decode import flash_decode
+            tile = autotune.cached_config(
+                "flash_decode",
+                autotune.flash_decode_problem(q.shape, ck.shape, q.dtype),
+                relax=("b", "cache_len"))
+            out = flash_decode(q, ck, cv, mask, interpret=ctx.interpret,
+                               block_kv=tile["block_kv"]).astype(x.dtype)
         else:
-            kv_pos = jnp.where(slot <= pos, slot, 2**30)
-        k_exp = _expand_kv(ck, h)
-        v_exp = _expand_kv(cv, h)
-        scale = 1.0 / math.sqrt(hd)
-        sgl = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
-                         k_exp.astype(jnp.float32))
-        mask = (kv_pos <= pos) & (kv_pos < 2**30)
-        if cfg.sliding_window:
-            mask &= (pos - kv_pos) < cfg.sliding_window
-        sgl = jnp.where(mask[None, None, None, :], sgl, NEG_INF)
-        w = jax.nn.softmax(sgl, axis=-1)
-        out = jnp.einsum("bhqk,bkhd->bqhd", w,
-                         v_exp.astype(jnp.float32)).astype(x.dtype)
+            k_exp = _expand_kv(ck, h)
+            v_exp = _expand_kv(cv, h)
+            scale = 1.0 / math.sqrt(hd)
+            sgl = jnp.einsum("bqhd,bkhd->bhqk",
+                             q.astype(jnp.float32) * scale,
+                             k_exp.astype(jnp.float32))
+            sgl = jnp.where(mask[None, None, None, :], sgl, NEG_INF)
+            w = jax.nn.softmax(sgl, axis=-1)
+            out = jnp.einsum("bhqk,bkhd->bqhd", w,
+                             v_exp.astype(jnp.float32)).astype(x.dtype)
     else:
         k_exp = _expand_kv(k, h)
         v_exp = _expand_kv(v, h)
@@ -229,6 +279,15 @@ def attention(ctx: Ctx, cfg: ArchConfig, p, x, positions,
             cache_len = cache["k"].shape[1]
             kk, vv = (k, v) if s <= cache_len else (k[:, -cache_len:],
                                                     v[:, -cache_len:])
+            if cfg.sliding_window and s > cache_len:
+                # ring layout: position p lives at slot p % cache_len.
+                # The retained tail starts at position s - cache_len, so
+                # rotate it into place — otherwise the first decode's
+                # kv_positions_for_cache recovery reads the wrong slots
+                # whenever s % cache_len != 0.
+                shift = s % cache_len
+                kk = jnp.roll(kk, shift, axis=1)
+                vv = jnp.roll(vv, shift, axis=1)
             ck = jax.lax.dynamic_update_slice(
                 cache["k"], kk.astype(cache["k"].dtype), (0, 0, 0, 0))
             cv = jax.lax.dynamic_update_slice(

@@ -123,7 +123,10 @@ def derive_problems(handle: DNNHandle, *, batch_m: int = 128,
     - block_sparse_matmul: same shapes, for paths carrying a pruning mask
       at 128-block granularity (max_live read off the mask);
     - flash_attention: the arch config's (seq_len, heads, head_dim) when
-      the handle wraps an LM.
+      the handle wraps an LM;
+    - flash_decode: the serving hot loop — one-token attention over the
+      arch's decode cache (window-bounded under sliding-window attention),
+      so TUNE picks the kv-split the deployed generate loop will run.
     Largest problems first, capped at ``max_problems``.
     """
     from repro.kernels import autotune
@@ -165,5 +168,21 @@ def derive_problems(handle: DNNHandle, *, batch_m: int = 128,
             "float32", causal=True)
         sized.append((seq * seq * cfg.n_heads,
                       {"kernel": "flash_attention", **prob}))
+        window = int(getattr(cfg, "sliding_window", 0) or 0)
+        cache_len = min(seq, window) if window else seq
+        # decode batch capped: the winning kv-split is batch-invariant
+        # (the grid is parallel over batch*kv_heads) but interpret-mode
+        # trial cost scales linearly with it.  dtype is the arch's
+        # activation dtype — what layers.attention keys cached_config on
+        # at serve time (q carries act_dtype there).
+        db = min(batch_m, 8)
+        adt = str(getattr(cfg, "act_dtype", "") or "float32")
+        dprob = autotune.flash_decode_problem(
+            (db, 1, cfg.n_heads, hd),
+            (db, cache_len, cfg.n_kv_heads, hd), adt)
+        # weighted like a full-cache prefill row so the serving hot loop
+        # survives the max_problems cap alongside the big matmuls
+        sized.append((seq * cache_len * cfg.n_heads,
+                      {"kernel": "flash_decode", **dprob}))
     sized.sort(key=lambda sp: -sp[0])
     return [p for _, p in sized[:max_problems]]

@@ -1,0 +1,274 @@
+"""flash_decode Pallas kernel vs the jnp decode oracle, the shared
+cache-position helper, and scan-vs-Python-loop generate equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.kernels.flash_decode import flash_decode
+from repro.models import layers as L
+from repro.models.common import Ctx
+
+KEY = jax.random.PRNGKey(0)
+
+
+def decode_oracle(q, k, v, mask):
+    """The jnp one-token attention math from layers.attention's decode
+    branch (expanded K/V + masked softmax)."""
+    h = q.shape[2]
+    k_exp = L._expand_kv(k, h)
+    v_exp = L._expand_kv(v, h)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   k_exp.astype(jnp.float32))
+    s = jnp.where(mask[None, None, None, :], s, L.NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w,
+                      v_exp.astype(jnp.float32)).astype(q.dtype)
+
+
+def _qkv(b, cache_len, h, kv_heads, d, dtype=jnp.float32):
+    q = jax.random.normal(KEY, (b, 1, h, d)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1),
+                          (b, cache_len, kv_heads, d)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2),
+                          (b, cache_len, kv_heads, d)).astype(dtype)
+    return q, k, v
+
+
+class TestFlashDecodeKernel:
+    @pytest.mark.parametrize("kv_heads", [1, 2, 4])
+    def test_gqa_group_sizes(self, kv_heads):
+        q, k, v = _qkv(2, 64, 4, kv_heads, 32)
+        mask = jnp.arange(64) < 40
+        y = flash_decode(q, k, v, mask, interpret=True)
+        r = decode_oracle(q, k, v, mask)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                                   rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("fill", [1, 17, 64])   # pos=0 / mid / full
+    def test_fill_levels(self, fill):
+        cache_len = 64
+        q, k, v = _qkv(2, cache_len, 4, 2, 16)
+        mask = jnp.arange(cache_len) < fill
+        y = flash_decode(q, k, v, mask, interpret=True)
+        r = decode_oracle(q, k, v, mask)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                                   rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("block_kv", [32, 64, 128, 256])
+    def test_kv_split_configs(self, block_kv):
+        """Non-default kv splits: genuine multi-tile reductions (128/32 =
+        4 partial-softmax steps) and tiles larger than the cache."""
+        cache_len = 128
+        q, k, v = _qkv(1, cache_len, 8, 2, 16)
+        mask = jnp.arange(cache_len) < 77
+        y = flash_decode(q, k, v, mask, interpret=True, block_kv=block_kv)
+        r = decode_oracle(q, k, v, mask)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_ragged_cache_snaps_divisor_safe(self):
+        """A split that does not divide the cache snaps (pick_block_kv)
+        rather than padding a cache copy every step — and stays exact."""
+        from repro.kernels.flash_decode import pick_block_kv
+        assert pick_block_kv(32, 100) == 100        # ragged -> one tile
+        assert pick_block_kv(32, 128) == 32         # divisor kept
+        assert pick_block_kv(128, 49) == 49         # clamp is exact
+        assert pick_block_kv(None, 4096) == 128
+        cache_len = 100
+        q, k, v = _qkv(1, cache_len, 4, 2, 16)
+        mask = jnp.arange(cache_len) < 77
+        y = flash_decode(q, k, v, mask, interpret=True, block_kv=32)
+        r = decode_oracle(q, k, v, mask)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_ring_buffer_mask(self):
+        """Wrapped sliding-window mask (live slots non-contiguous across
+        the ring seam) matches the oracle."""
+        cache_len, window, pos = 32, 24, 45     # wrapped: 45 % 32 = 13
+        q, k, v = _qkv(2, cache_len, 4, 2, 16)
+        kv_pos = L.kv_positions_for_cache(jnp.asarray(pos), cache_len,
+                                          window)
+        mask = L.decode_attention_mask(kv_pos, pos, window)
+        y = flash_decode(q, k, v, mask, interpret=True, block_kv=32)
+        r = decode_oracle(q, k, v, mask)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                                   rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        q, k, v = _qkv(1, 48, 4, 1, 32, dtype)
+        mask = jnp.arange(48) < 48
+        y = flash_decode(q, k, v, mask, interpret=True)
+        assert y.dtype == dtype
+        r = decode_oracle(q, k, v, mask)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(r, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+class TestCachedConfig:
+    def test_layer_dispatch_sees_persisted_winner(self, tmp_path):
+        """cached_config: default on a miss, the persisted TUNE winner on
+        a hit — and never triggers a tile search itself."""
+        from repro.kernels import autotune
+        path = str(tmp_path / "cache.json")
+        prob = autotune.flash_decode_problem((1, 1, 4, 16), (1, 64, 2, 16),
+                                             "float32")
+        assert autotune.cached_config("flash_decode", prob,
+                                      cache_path=path) == {"block_kv": 128}
+        res = autotune.tune("flash_decode", prob, cache_path=path,
+                            iters=1, max_trials=3)
+        autotune.clear_memory_cache()
+        assert autotune.cached_config("flash_decode", prob,
+                                      cache_path=path) == res.config
+
+    def test_relaxed_match_covers_serving_shapes(self, tmp_path):
+        """A TUNE entry at the arch's nominal (b, cache_len) stands in
+        for the serving shape's actual batch/cache length via relax."""
+        from repro.kernels import autotune
+        path = str(tmp_path / "cache.json")
+        tuned_prob = autotune.flash_decode_problem(
+            (4, 1, 4, 16), (4, 256, 2, 16), "float32")
+        res = autotune.tune("flash_decode", tuned_prob, cache_path=path,
+                            iters=1, max_trials=3)
+        serve_prob = autotune.flash_decode_problem(
+            (2, 1, 4, 16), (2, 49, 2, 16), "float32")
+        # strict lookup misses; relaxed lookup finds the tuned entry
+        assert autotune.cached_config(
+            "flash_decode", serve_prob,
+            cache_path=path) == {"block_kv": 128}
+        assert autotune.cached_config(
+            "flash_decode", serve_prob, cache_path=path,
+            relax=("b", "cache_len")) == res.config
+        # a different head layout never matches, relaxed or not
+        other = autotune.flash_decode_problem(
+            (2, 1, 8, 16), (2, 49, 4, 16), "float32")
+        assert autotune.cached_config(
+            "flash_decode", other, cache_path=path,
+            relax=("b", "cache_len")) == {"block_kv": 128}
+
+
+class TestKvPositions:
+    def test_linear_cache(self):
+        kv_pos = L.kv_positions_for_cache(jnp.asarray(5), 8, 0)
+        assert kv_pos.tolist() == [0, 1, 2, 3, 4, 5, 2**30, 2**30]
+
+    def test_ring_buffer_wrapped(self):
+        # cache_len=4, pos=6 -> idx=2; slots hold [4, 5, 6, 3]
+        kv_pos = L.kv_positions_for_cache(jnp.asarray(6), 4, 16)
+        assert kv_pos.tolist() == [4, 5, 6, 3]
+
+    def test_ring_buffer_unfilled(self):
+        # pos=1 -> only slots 0..1 ever written
+        kv_pos = L.kv_positions_for_cache(jnp.asarray(1), 4, 16)
+        assert kv_pos.tolist() == [0, 1, 2**30, 2**30]
+
+
+@pytest.mark.parametrize("arch,pos", [
+    ("qwen2-7b", 0), ("qwen2-7b", 15),
+    ("h2o-danube-3-4b", 0), ("h2o-danube-3-4b", 15),
+    ("h2o-danube-3-4b", 45),                        # wrapped ring buffer
+])
+def test_attention_layer_kernel_matches_oracle(arch, pos):
+    """layers.attention decode: ctx.use_kernels flash_decode path vs the
+    jnp oracle — same output, same updated cache."""
+    cfg = get_config(arch, smoke=True).replace(act_dtype="float32")
+    cache_len = 16 if not cfg.sliding_window else min(16, cfg.sliding_window)
+    if not cfg.sliding_window and pos >= cache_len:
+        pytest.skip("linear cache: pos beyond cache")
+    p, _ = L.init_attention(KEY, cfg)
+    b = 2
+    cache, _ = L.init_attention_cache(cfg, b, cache_len, dtype=jnp.float32)
+    cache = dict(cache,
+                 k=jax.random.normal(jax.random.PRNGKey(3),
+                                     cache["k"].shape),
+                 v=jax.random.normal(jax.random.PRNGKey(4),
+                                     cache["v"].shape),
+                 pos=jnp.asarray(pos, jnp.int32))
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, 1, cfg.d_model)) * 0.3
+    positions = jnp.asarray([pos])
+    y_ref, c_ref = L.attention(Ctx(decode=True), cfg, p, x, positions,
+                               dict(cache))
+    y_ker, c_ker = L.attention(Ctx(decode=True, use_kernels=True,
+                                   interpret=True), cfg, p, x, positions,
+                               dict(cache))
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    for leaf in ("k", "v", "pos"):
+        np.testing.assert_array_equal(np.asarray(c_ker[leaf]),
+                                      np.asarray(c_ref[leaf]))
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_ring_prefill_overflow_then_decode(use_kernels):
+    """Prompt longer than the window cache with s % cache_len != 0: the
+    prefill must rotate the retained tail into ring layout so decode's
+    position recovery reads the right slots (seed bug — the unrotated
+    cache silently attended wrong keys)."""
+    cfg = get_config("h2o-danube-3-4b", smoke=True).replace(
+        act_dtype="float32")
+    s, cache_len = 40, 32                    # window 32; 40 % 32 != 0
+    assert cfg.sliding_window == cache_len
+    p, _ = L.init_attention(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (1, s + 1, cfg.d_model)) * 0.3
+    # reference: full-sequence sliding-window attention, last token
+    y_full, _ = L.attention(Ctx(), cfg, p, x, jnp.arange(s + 1))
+    cache, _ = L.init_attention_cache(cfg, 1, cache_len, dtype=jnp.float32)
+    _, cache = L.attention(Ctx(), cfg, p, x[:, :s], jnp.arange(s), cache)
+    ctx = Ctx(decode=True, use_kernels=use_kernels,
+              interpret=use_kernels)
+    y_dec, _ = L.attention(ctx, cfg, p, x[:, s:], jnp.asarray([s]), cache)
+    np.testing.assert_allclose(np.asarray(y_dec),
+                               np.asarray(y_full[:, -1:]),
+                               rtol=2e-4, atol=2e-4)
+
+
+class TestGenerateScanEquivalence:
+    @pytest.mark.parametrize("arch", ["qwen2-7b", "h2o-danube-3-4b"])
+    def test_scan_matches_python_loop(self, arch):
+        """The fused lax.scan generation loop produces the same greedy
+        tokens as the seed per-token Python loop."""
+        from repro.launch.serve import generate, make_serve_fns
+        from repro.models.api import build_model
+
+        cfg = get_config(arch, smoke=True).replace(act_dtype="float32")
+        model = build_model(cfg)
+        params = model.init(KEY)
+        prompts = jax.random.randint(jax.random.PRNGKey(7), (2, 8),
+                                     0, cfg.vocab_size)
+        fns = make_serve_fns(model)
+        gen, cache_len = 6, 16
+        t_loop = generate(model, params, prompts, gen, cache_len,
+                          scan=False, fns=fns)
+        t_scan = generate(model, params, prompts, gen, cache_len,
+                          scan=True, fns=fns)
+        assert t_loop.shape == t_scan.shape == (2, gen)
+        np.testing.assert_array_equal(np.asarray(t_loop),
+                                      np.asarray(t_scan))
+
+    def test_kernel_scan_matches_jnp_loop(self):
+        """End-to-end: flash_decode + scan vs the seed jnp Python loop."""
+        from repro.launch.serve import generate
+        from repro.models.api import build_model
+
+        cfg = get_config("qwen2-7b", smoke=True).replace(
+            act_dtype="float32")
+        prompts = jax.random.randint(jax.random.PRNGKey(7), (2, 8),
+                                     0, cfg.vocab_size)
+        gen, cache_len = 6, 16
+        m_jnp = build_model(cfg)
+        m_ker = build_model(cfg, use_kernels=True, interpret=True)
+        params = m_jnp.init(KEY)
+        t_loop = generate(m_jnp, params, prompts, gen, cache_len,
+                          scan=False)
+        t_ker = generate(m_ker, params, prompts, gen, cache_len,
+                         scan=True)
+        np.testing.assert_array_equal(np.asarray(t_loop),
+                                      np.asarray(t_ker))
