@@ -18,6 +18,21 @@ layouts: linear (qwen2 GQA) and sliding-window ring buffer (danube).
 Rows land in ``benchmarks/results/serve_bench.json`` with a
 ``not_slower_than_seed`` verdict per shape: the scan'd flash-decode path
 must never lose to the seed Python-loop jnp path.
+
+A second, load-driven suite (``_bench_load``) drives the paged
+continuous-batching engine (src/repro/serving/) against the single-stream
+scan path under request traffic: one burst row (8 requests arriving at
+once — the concurrency acceptance row) and Poisson-arrival rows at rates
+below and above the single-stream service capacity.  Each row reports
+aggregate decode tokens/s and p50/p95 per-request latency
+(completion − arrival).  Two gates: the paged burst row must reach >= 2x
+the single-stream aggregate *decode* tokens/s (prefill is excluded from
+the ratio — serial batch-1 admissions cost the same in both paths and
+only dilute the quantity continuous batching changes; wall-clock speedup
+is reported alongside), and the engine's greedy tokens must be
+identical, request by request, to the contiguous jnp-oracle scan path
+(kernel-vs-oracle equivalence inside the engine is pinned separately by
+tests/test_paged.py).
 """
 
 from __future__ import annotations
@@ -26,6 +41,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 try:
     from benchmarks.common import emit, save_json
@@ -104,6 +120,156 @@ def _bench_shape(arch: str, batch: int, prompt_len: int, gen: int) -> dict:
     return row
 
 
+# ---------------------------------------------------------- load suite
+LOAD_ARCH = "qwen2-7b"          # linear cache: the paged-eligible shape
+LOAD_PROMPT, LOAD_GEN = 32, 16
+LOAD_SLOTS = 8                  # in-flight batch width = the 8-concurrent row
+LOAD_BURST = 8                  # requests in the burst (acceptance) row
+LOAD_POISSON_N = 10             # requests per Poisson row
+
+
+def _load_requests(cfg, n, seed):
+    from repro.data.synthetic import lm_tokens
+    from repro.serving import Request
+    prompts = np.asarray(
+        lm_tokens(n * LOAD_PROMPT, cfg.vocab_size, seed=seed)
+    ).reshape(n, LOAD_PROMPT).astype(np.int32)
+    return [Request(rid=i, prompt=prompts[i], max_new_tokens=LOAD_GEN)
+            for i in range(n)]
+
+
+def _poisson_arrivals(n, rate, seed):
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n)).tolist()
+
+
+def _single_stream(model, fns, params, reqs):
+    """FIFO baseline: one request at a time through the fused contiguous
+    scan path (scan_jnp — the best pre-paging serving configuration)."""
+    from repro.launch.serve import timed_generate
+    cache_len = LOAD_PROMPT + LOAD_GEN + 1
+    lat, tokens = [], {}
+    decode_s = 0.0
+    t0 = time.perf_counter()
+    for req in sorted(reqs, key=lambda r: r.arrival):
+        now = time.perf_counter() - t0
+        if req.arrival > now:
+            time.sleep(req.arrival - now)
+        out, t = timed_generate(model, params,
+                                jnp.asarray(req.prompt[None]), LOAD_GEN,
+                                cache_len, scan=True, fns=fns)
+        decode_s += t["decode_s"]
+        tokens[req.rid] = [int(tk) for tk in np.asarray(out)[0]]
+        lat.append((time.perf_counter() - t0) - req.arrival)
+    wall = time.perf_counter() - t0
+    return {"wall_s": wall, "decode_s": decode_s,
+            "tokens_per_s": len(reqs) * LOAD_GEN / max(wall, 1e-9),
+            "decode_tokens_per_s":
+                len(reqs) * (LOAD_GEN - 1) / max(decode_s, 1e-9),
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p95_s": float(np.percentile(lat, 95))}, tokens
+
+
+def _paged(engine, params, reqs):
+    stats = engine.run(reqs, params)
+    lat = [r.t_done - r.arrival for r in reqs]
+    wall = stats["wall_s"]
+    return {"wall_s": wall, "decode_s": stats["decode_s"],
+            "tokens_per_s": len(reqs) * LOAD_GEN / max(wall, 1e-9),
+            "decode_tokens_per_s":
+                len(reqs) * (LOAD_GEN - 1) / max(stats["decode_s"], 1e-9),
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p95_s": float(np.percentile(lat, 95)),
+            "n_segments": stats["n_segments"]}, \
+        {r.rid: list(r.tokens) for r in reqs}
+
+
+def _bench_load() -> dict:
+    from repro.configs.registry import get_config
+    from repro.launch.serve import generate, make_serve_fns
+    from repro.models.api import build_model
+    from repro.serving import PagedCacheConfig, PagedServingEngine
+    from repro.serving.engine import warmup
+    from repro.serving.paged_cache import preferred_page_size
+
+    cfg = get_config(LOAD_ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    fns = make_serve_fns(model)
+    cap_tokens = LOAD_PROMPT + LOAD_GEN + 1
+    page_size = preferred_page_size(cfg, LOAD_SLOTS, cap_tokens)
+    blocks = -(-cap_tokens // page_size)
+    pcfg = PagedCacheConfig(page_size=page_size,
+                            n_pages=LOAD_SLOTS * blocks + 1,
+                            max_slots=LOAD_SLOTS, max_blocks=blocks,
+                            segment_len=8)
+    engine = PagedServingEngine(model, pcfg)
+
+    # compile both paths outside every timed region
+    generate(model, params,
+             jnp.asarray(_load_requests(cfg, 1, 99)[0].prompt[None]),
+             LOAD_GEN, cap_tokens, scan=True, fns=fns)
+    warmup(engine, params, LOAD_PROMPT, LOAD_GEN)
+
+    suite = {"arch": cfg.name, "prompt_len": LOAD_PROMPT, "gen": LOAD_GEN,
+             "slots": LOAD_SLOTS, "page_size": page_size, "rows": []}
+
+    # burst row: 8 concurrent requests — the acceptance measurement
+    # (best-of-ITERS per path, selected on the gated decode time:
+    # single-run timings are noisy on CI)
+    base_row = base_tok = paged_row = paged_tok = None
+    for _ in range(ITERS):
+        b_row, b_tok = _single_stream(
+            model, fns, params, _load_requests(cfg, LOAD_BURST, 1))
+        if base_row is None or b_row["decode_s"] < base_row["decode_s"]:
+            base_row, base_tok = b_row, b_tok
+        p_row, p_tok = _paged(
+            engine, params, _load_requests(cfg, LOAD_BURST, 1))
+        if paged_row is None or p_row["decode_s"] < paged_row["decode_s"]:
+            paged_row, paged_tok = p_row, p_tok
+    # the gated ratio is *aggregate decode* tokens/s: serial batch-1
+    # prefills cost the same in both paths and would only dilute the
+    # quantity continuous batching actually changes (batched admission
+    # prefill is a ROADMAP open item); end-to-end wall speedup is
+    # reported alongside
+    speedup = (paged_row["decode_tokens_per_s"]
+               / max(base_row["decode_tokens_per_s"], 1e-9))
+    wall_speedup = paged_row["tokens_per_s"] / max(
+        base_row["tokens_per_s"], 1e-9)
+    tokens_equal = paged_tok == base_tok
+    suite["rows"].append({
+        "load": f"burst{LOAD_BURST}", "rate_req_s": None,
+        "single_stream": base_row, "paged": paged_row,
+        "paged_decode_speedup": speedup,
+        "paged_wall_speedup": wall_speedup,
+        "tokens_equal_oracle": tokens_equal})
+
+    # Poisson rows: rates relative to the measured single-stream service
+    # capacity (machine-adaptive, seeded arrival patterns)
+    service_rate = LOAD_BURST / base_row["wall_s"]        # req/s
+    for tag, factor in (("underload", 0.75), ("overload", 1.5)):
+        rate = factor * service_rate
+        for name, runner in (("single_stream",
+                              lambda rq: _single_stream(model, fns,
+                                                        params, rq)),
+                             ("paged",
+                              lambda rq: _paged(engine, params, rq))):
+            reqs = _load_requests(cfg, LOAD_POISSON_N, 7)
+            arrivals = _poisson_arrivals(LOAD_POISSON_N, rate, seed=13)
+            for r, a in zip(reqs, arrivals):
+                r.arrival = a
+            row, _ = runner(reqs)
+            suite["rows"].append({"load": f"poisson_{tag}",
+                                  "rate_req_s": rate, "path": name,
+                                  **row})
+
+    suite["verdict"] = {
+        "paged_2x_at_8_concurrent": speedup >= 2.0,
+        "tokens_equal_oracle": tokens_equal,
+    }
+    return suite
+
+
 def main():
     results = {"backend": jax.default_backend(), "t": time.time(),
                "shapes": []}
@@ -124,6 +290,30 @@ def main():
         emit(f"{tag}_verdict", 0.0,
              f"not_slower_than_seed={int(row['not_slower_than_seed'])};"
              f"samples_agree={int(row['samples_agree'])}")
+
+    load = _bench_load()
+    results["load"] = load
+    for r in load["rows"]:
+        if "paged_decode_speedup" in r:
+            emit(f"serve_load_{r['load']}_paged",
+                 r["paged"]["wall_s"] * 1e6,
+                 f"decode_tok_s={r['paged']['decode_tokens_per_s']:.1f};"
+                 f"vs_single_stream={r['paged_decode_speedup']:.2f}x;"
+                 f"wall={r['paged_wall_speedup']:.2f}x;"
+                 f"p95_s={r['paged']['latency_p95_s']:.3f};"
+                 f"tokens_equal={int(r['tokens_equal_oracle'])}")
+            emit(f"serve_load_{r['load']}_single_stream",
+                 r["single_stream"]["wall_s"] * 1e6,
+                 f"decode_tok_s="
+                 f"{r['single_stream']['decode_tokens_per_s']:.1f};"
+                 f"p95_s={r['single_stream']['latency_p95_s']:.3f}")
+        else:
+            emit(f"serve_load_{r['load']}_{r['path']}",
+                 r["wall_s"] * 1e6,
+                 f"rate={r['rate_req_s']:.2f}req_s;"
+                 f"tok_s={r['tokens_per_s']:.1f};"
+                 f"p50_s={r['latency_p50_s']:.3f};"
+                 f"p95_s={r['latency_p95_s']:.3f}")
     save_json("serve_bench.json", results)
     # the speed verdict gates CI, it is not just an artifact field.
     # samples_agree is reported but not gated: greedy argmax can
@@ -136,6 +326,24 @@ def main():
         raise SystemExit(f"serve bench regression on {slow}: the scan'd "
                          f"flash-decode path must never be slower than "
                          f"the seed Python-loop jnp path")
+    verdict = load["verdict"]
+    if not verdict["tokens_equal_oracle"]:
+        # Gated (unlike samples_agree above): the acceptance criterion
+        # for the paged engine is token-identical generation, and both
+        # sides run the same jnp attention math (the paged path's extra
+        # masked slots contribute exact zeros to the softmax sums).  A
+        # residual flake mode exists — a near-tie in top-2 logits plus a
+        # batch-8-vs-batch-1 reduction-grouping difference could flip one
+        # argmax — so if this trips on an unchanged tree, diff the
+        # per-request token grids in the JSON artifact before suspecting
+        # the engine.
+        raise SystemExit("paged engine tokens diverged from the "
+                         "contiguous jnp-oracle scan path (see "
+                         "benchmarks/results/serve_bench.json load row)")
+    if not verdict["paged_2x_at_8_concurrent"]:
+        raise SystemExit("continuous-batching paged decode fell below "
+                         "2x single-stream aggregate decode tokens/s at "
+                         f"{LOAD_BURST} concurrent requests")
     return results
 
 

@@ -52,6 +52,8 @@ from repro.core.search import SearchResult, exhaustive_search
 from repro.kernels.block_sparse_matmul import block_sparse_matmul
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_decode import flash_decode, pick_block_kv
+from repro.kernels.flash_decode_paged import (DEFAULT_PAGE_SIZE,
+                                              flash_decode_paged)
 from repro.kernels.quant_matmul import BK, BM, BN, quant_matmul
 
 TILE_SIZES = (32, 64, 128, 256)
@@ -293,6 +295,84 @@ def flash_decode_problem(q_shape, kv_shape, dtype) -> dict[str, Any]:
             "dtype": jnp.dtype(dtype).name}
 
 
+# paged flash decode ---------------------------------------------------------
+def _fpd_vmem(problem: dict[str, Any], cfg: dict[str, int]) -> int:
+    d = problem["d"]
+    g = problem["h"] // problem["kv_heads"]
+    # the K/V tile is always a full page — a page larger than max_len is
+    # padded, not clamped (unlike the contiguous kernels' tiles)
+    ps = cfg["page_size"]
+    item = _itemsize(problem["dtype"])
+    blocks = (2 * g * d + 2 * ps * d) * item        # q, out, k, v page tiles
+    mask = ps * 4                                   # int32 validity tile
+    scratch = (2 * g + g * d) * 4                   # m, l, acc (f32)
+    temps = 2 * g * ps * 4                          # s and p (f32)
+    return blocks + mask + scratch + temps
+
+
+def _fpd_candidates(problem: dict[str, Any]
+                    ) -> list[tuple[dict[str, int], int]]:
+    # page_size IS the kv-split of the paged kernel AND the pool's
+    # allocation granule: small pages fragment less (~page_size/2 wasted
+    # tokens per request), big pages mean fewer grid steps per token.
+    # The tuner times the kernel side; the engine reads the winner back
+    # at pool-construction time (serving/paged_cache.preferred_page_size).
+    # Ascending enumeration + effective-coverage dedup: page sizes whose
+    # effective coverage min(ps, max_len) collapses are redundant grids,
+    # and keeping the SMALLEST representative keeps pool padding minimal
+    # (a covering page larger than max_len only wastes pool bytes).  The
+    # default page size is force-included even when it collapses, so the
+    # 'default is always measured' invariant (and the distance-sorted cap
+    # in enumerate_candidates) holds like every other kernel.
+    out, seen = [], set()
+    for ps in sorted(set(TILE_SIZES) | {8, 16, DEFAULT_PAGE_SIZE}):
+        eff = min(ps, problem["max_len"])
+        if eff in seen and ps != DEFAULT_PAGE_SIZE:
+            continue
+        seen.add(eff)
+        cfg = {"page_size": ps}
+        out.append((cfg, _fpd_vmem(problem, cfg)))
+    return out
+
+
+@functools.lru_cache(maxsize=16)
+def _fpd_inputs(problem_json: str, page_size: int):
+    problem = json.loads(problem_json)
+    dtype = jnp.dtype(problem["dtype"])
+    slots, h, d = problem["slots"], problem["h"], problem["d"]
+    kvh, max_len = problem["kv_heads"], problem["max_len"]
+    blocks = -(-max_len // page_size)
+    n_pages = slots * blocks + 1           # + the reserved scratch page
+    q = jax.random.normal(jax.random.PRNGKey(0),
+                          (slots, 1, h, d)).astype(dtype)
+    kp = jax.random.normal(jax.random.PRNGKey(1),
+                           (n_pages, page_size, kvh, d)).astype(dtype)
+    vp = jax.random.normal(jax.random.PRNGKey(2),
+                           (n_pages, page_size, kvh, d)).astype(dtype)
+    bt = 1 + jnp.arange(slots * blocks, dtype=jnp.int32).reshape(
+        slots, blocks)
+    # steady-state (worst-case) decode: every request near capacity
+    mask = jnp.broadcast_to(
+        jnp.arange(blocks * page_size)[None, :] < max_len,
+        (slots, blocks * page_size))
+    return q, kp, vp, bt, mask
+
+
+def _fpd_runner(problem: dict[str, Any], cfg: dict[str, int],
+                interpret: bool) -> Callable[[], Any]:
+    q, kp, vp, bt, mask = _fpd_inputs(
+        json.dumps(problem, sort_keys=True), cfg["page_size"])
+    return lambda: flash_decode_paged(q, kp, vp, bt, mask,
+                                      interpret=interpret)
+
+
+def flash_decode_paged_problem(slots: int, h: int, kv_heads: int, d: int,
+                               max_len: int, dtype) -> dict[str, Any]:
+    return {"slots": int(slots), "h": int(h), "kv_heads": int(kv_heads),
+            "d": int(d), "max_len": int(max_len),
+            "dtype": jnp.dtype(dtype).name}
+
+
 # quant matmul ---------------------------------------------------------------
 def _qmm_vmem(problem: dict[str, Any], cfg: dict[str, int]) -> int:
     bm = min(cfg["block_m"], problem["m"])
@@ -406,6 +486,9 @@ KERNELS: dict[str, KernelEntry] = {
     "flash_decode": KernelEntry(
         "flash_decode", {"block_kv": 128},
         _fd_candidates, _fd_runner),
+    "flash_decode_paged": KernelEntry(
+        "flash_decode_paged", {"page_size": 16},
+        _fpd_candidates, _fpd_runner),
     "quant_matmul": KernelEntry(
         "quant_matmul", {"block_m": BM, "block_n": BN, "block_k": BK},
         _qmm_candidates, _qmm_runner),

@@ -62,41 +62,68 @@ def pick_block_kv(block_kv: int | None, skv: int) -> int:
     return bkv
 
 
+def online_softmax_init(m_ref, l_ref, acc_ref) -> None:
+    """Reset the (m, l, acc) partial-softmax carry at the first kv step.
+
+    Shared with kernels/flash_decode_paged.py so the numerically
+    sensitive online-softmax update cannot drift between the contiguous
+    and paged decode kernels.
+    """
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def online_softmax_step(q_ref, k_ref, v_ref, live,
+                        m_ref, l_ref, acc_ref, *, scale: float) -> None:
+    """Accumulate one K/V tile into the (m, l, acc) carry.
+
+    q_ref: (1, 1, g, d) grouped-q tile; k/v_ref: (1, tile, 1, d);
+    live: (1, tile) bool validity of the tile's cache slots.
+    """
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (g, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)             # (tile, d)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = jnp.where(live, s, NEG_INF)                    # (g, tile)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def online_softmax_finish(out_ref, m_ref, l_ref, acc_ref) -> None:
+    """Write the normalized accumulator after the last kv step."""
+    del m_ref
+    out_ref[0, 0] = (acc_ref[...]
+                     / jnp.maximum(l_ref[...], 1e-30)).astype(
+                         out_ref.dtype)
+
+
 def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, out_ref,
                    m_ref, l_ref, acc_ref, *, kv_steps: int, scale: float):
     kj = pl.program_id(2)
 
     @pl.when(kj == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        online_softmax_init(m_ref, l_ref, acc_ref)
 
     live = mask_ref[...] != 0                          # (1, bkv)
 
     @pl.when(jnp.any(live))
     def _step():
-        q = q_ref[0, 0].astype(jnp.float32) * scale    # (g, d)
-        k = k_ref[0, :, 0].astype(jnp.float32)         # (bkv, d)
-        v = v_ref[0, :, 0].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-        s = jnp.where(live, s, NEG_INF)                # (g, bkv)
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        corr = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_ref[...] = m_new
+        online_softmax_step(q_ref, k_ref, v_ref, live,
+                            m_ref, l_ref, acc_ref, scale=scale)
 
     @pl.when(kj == kv_steps - 1)
     def _finish():
-        out_ref[0, 0] = (acc_ref[...]
-                         / jnp.maximum(l_ref[...], 1e-30)).astype(
-                             out_ref.dtype)
+        online_softmax_finish(out_ref, m_ref, l_ref, acc_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_kv"))

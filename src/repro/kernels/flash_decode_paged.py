@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: paged flash-decoding attention over a block-table KV
+cache.
+
+The paged mirror of kernels/flash_decode.py: one generated token per
+request attends over that request's KV history, but the cache is no longer
+one contiguous ``(B, L, KV, D)`` buffer — it is a shared pool of
+fixed-size pages ``(P, page_size, KV, D)`` plus a per-request *block
+table* mapping logical block ``j`` of request ``r`` to a physical page.
+That indirection is what lets the serving engine admit/evict requests
+without ever copying or compacting KV state (src/repro/serving/).
+
+Mechanically the kv-split of flash_decode becomes the page: the grid is
+``(slots, kv_heads, blocks_per_req)`` and the innermost dimension walks
+the request's block table, reducing pages with the partial-softmax
+``(m, l, acc)`` carry in VMEM scratch.  The block table rides in as a
+*scalar-prefetch* operand (``pltpu.PrefetchScalarGridSpec``) so the K/V
+BlockSpec index maps can dereference it — the DMA for page ``bt[r, j]``
+is issued directly from the table, no gather of the pool ever
+materializes.
+
+GQA uses the same grouped-q fold as flash_decode: q is reshaped
+``(R, H, D) -> (R, KV, g, D)`` so the ``g`` query heads sharing a kv head
+score against one K/V page read.
+
+Masking follows the PR-2 contract: the kernel consumes a precomputed
+``(R, max_blocks * page_size)`` validity mask built by the caller from
+``models/layers.py::paged_kv_positions`` / ``paged_decode_attention_mask``
+— the same helpers the jnp oracle uses, so the two paths cannot disagree
+about which slots are live.  Ragged per-request lengths are just ragged
+masks; blocks past a short request's length skip their MXU work entirely
+(``pl.when``), which is what makes one dispatch serve a ragged batch.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_decode import (online_softmax_finish,
+                                        online_softmax_init,
+                                        online_softmax_step)
+
+DEFAULT_PAGE_SIZE = 16
+
+
+def _paged_decode_kernel(bt_ref, q_ref, k_ref, v_ref, mask_ref, out_ref,
+                         m_ref, l_ref, acc_ref, *, blocks: int,
+                         scale: float):
+    del bt_ref  # consumed by the BlockSpec index maps, not the body
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        online_softmax_init(m_ref, l_ref, acc_ref)
+
+    live = mask_ref[...] != 0                          # (1, ps)
+
+    @pl.when(jnp.any(live))
+    def _step():
+        online_softmax_step(q_ref, k_ref, v_ref, live,
+                            m_ref, l_ref, acc_ref, scale=scale)
+
+    @pl.when(j == blocks - 1)
+    def _finish():
+        online_softmax_finish(out_ref, m_ref, l_ref, acc_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
+                       v_pages: jnp.ndarray, block_tables: jnp.ndarray,
+                       mask: jnp.ndarray, *,
+                       interpret: bool = False) -> jnp.ndarray:
+    """q: (R,1,H,D); k/v_pages: (P, page_size, KV, D) with H % KV == 0;
+    block_tables: (R, max_blocks) int32 physical page per logical block
+    (entries past a request's length must still be valid page indices —
+    the serving layer parks them on its reserved scratch page); mask:
+    (R, max_blocks * page_size) bool — True where the logical slot
+    participates.  Returns (R,1,H,D).  The page size is the kv-split: it
+    is fixed by the pool layout, so it is tuned at pool-construction time
+    (kernels/autotune.py ``flash_decode_paged``), not per call.
+    """
+    r, sq, h, d = q.shape
+    n_pages, ps, kvh, _ = k_pages.shape
+    rt, blocks = block_tables.shape
+    assert sq == 1, f"flash_decode_paged is single-token (got sq={sq})"
+    assert h % kvh == 0, (h, kvh)
+    assert rt == r, (rt, r)
+    assert mask.shape == (r, blocks * ps), (mask.shape, r, blocks, ps)
+    g = h // kvh
+    qf = q[:, 0].reshape(r, kvh, g, d)
+    mf = mask.astype(jnp.int32)
+    grid = (r, kvh, blocks)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, blocks=blocks,
+                          scale=1.0 / math.sqrt(d)),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d),
+                             lambda ri, kv, j, bt: (ri, kv, 0, 0)),
+                pl.BlockSpec((1, ps, 1, d),
+                             lambda ri, kv, j, bt: (bt[ri, j], 0, kv, 0)),
+                pl.BlockSpec((1, ps, 1, d),
+                             lambda ri, kv, j, bt: (bt[ri, j], 0, kv, 0)),
+                pl.BlockSpec((1, ps),
+                             lambda ri, kv, j, bt: (ri, j)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d),
+                                   lambda ri, kv, j, bt: (ri, kv, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((r, kvh, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, qf, k_pages, v_pages, mf)
+    return out.reshape(r, 1, h, d)

@@ -35,8 +35,24 @@ from repro.quant.policy import INT8, quantize_int8
 
 if hasattr(jax, "shard_map"):  # jax>=0.6
     shard_map = jax.shard_map
-else:  # pragma: no cover
+else:
     from jax.experimental.shard_map import shard_map  # type: ignore
+
+# The replication-check kwarg was renamed check_rep -> check_vma across
+# JAX versions; feature-detect against the installed signature so the
+# _moe_ep shard_map works on either side of the rename.
+import inspect as _inspect
+
+_SHARD_MAP_CHECK_KW = next(
+    (kw for kw in ("check_vma", "check_rep")
+     if kw in _inspect.signature(shard_map).parameters), None)
+
+
+def _shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """shard_map with the replication/VMA check disabled, version-portably."""
+    kw = {_SHARD_MAP_CHECK_KW: False} if _SHARD_MAP_CHECK_KW else {}
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kw)
 
 NEG_INF = -1e30
 
@@ -126,6 +142,52 @@ def decode_attention_mask(kv_pos: jnp.ndarray, pos,
     if sliding_window:
         mask &= (pos - kv_pos) < sliding_window
     return mask
+
+
+def paged_kv_positions(seq_lens: jnp.ndarray, n_slots: int) -> jnp.ndarray:
+    """(R, n_slots) absolute position held by each logical paged-cache slot.
+
+    The paged variant of :func:`kv_positions_for_cache`: pages are
+    logically contiguous per request (block tables hide the physical
+    scatter), so slot ``i`` of request ``r`` holds position ``i`` when
+    ``i <= seq_lens[r]`` (the slot at ``seq_lens[r]`` is the current
+    token, written before attention) and is empty (2**30) past it.
+    ``seq_lens`` is per-request — rows are ragged by construction.  The
+    single source of truth shared by the jnp paged oracle and the
+    flash_decode_paged kernel's mask, so the two cannot drift.
+    """
+    slot = jnp.arange(n_slots)
+    return jnp.where(slot[None, :] <= seq_lens[:, None], slot[None, :],
+                     2**30)
+
+
+def paged_decode_attention_mask(kv_pos: jnp.ndarray,
+                                seq_lens: jnp.ndarray) -> jnp.ndarray:
+    """(R, n_slots) bool: slots each request's current token attends."""
+    return (kv_pos <= seq_lens[:, None]) & (kv_pos < 2**30)
+
+
+def _masked_decode_attention(q, k, v, mask, n_heads: int) -> jnp.ndarray:
+    """jnp one-token decode attention oracle.
+
+    q: (B, 1, H, hd) over K/V (B, L, KV, hd); mask: (L,) batch-shared
+    (contiguous cache — the decode position is a scalar) or (B, L)
+    per-request (paged cache — ragged batch).  One implementation shared
+    by the contiguous and paged decode branches so the oracle math the
+    flash kernels are validated against cannot drift between cache
+    layouts.
+    """
+    hd = q.shape[-1]
+    k_exp = _expand_kv(k, n_heads)
+    v_exp = _expand_kv(v, n_heads)
+    scale = 1.0 / math.sqrt(hd)
+    sgl = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                     k_exp.astype(jnp.float32))
+    m2 = mask if mask.ndim == 2 else mask[None]
+    sgl = jnp.where(m2[:, None, None, :], sgl, NEG_INF)
+    w = jax.nn.softmax(sgl, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w,
+                      v_exp.astype(jnp.float32)).astype(q.dtype)
 
 
 def mea_attention(q, k, v, q_positions, kv_positions, *,
@@ -224,7 +286,9 @@ def attention(ctx: Ctx, cfg: ArchConfig, p, x, positions,
         k = apply_rope(k, positions, cfg.rope_theta)
 
     new_cache = cache
-    if cache is not None and ctx.decode:
+    if cache is not None and ctx.decode and "k_pages" in cache:
+        out, new_cache = _paged_attention_decode(ctx, cfg, q, k, v, cache)
+    elif cache is not None and ctx.decode:
         cache_len = cache["k"].shape[1]
         pos = cache["pos"]  # scalar int32: absolute position of x[:, 0]
         idx = pos % cache_len if cfg.sliding_window else pos
@@ -258,16 +322,7 @@ def attention(ctx: Ctx, cfg: ArchConfig, p, x, positions,
             out = flash_decode(q, ck, cv, mask, interpret=ctx.interpret,
                                block_kv=tile["block_kv"]).astype(x.dtype)
         else:
-            k_exp = _expand_kv(ck, h)
-            v_exp = _expand_kv(cv, h)
-            scale = 1.0 / math.sqrt(hd)
-            sgl = jnp.einsum("bqhd,bkhd->bhqk",
-                             q.astype(jnp.float32) * scale,
-                             k_exp.astype(jnp.float32))
-            sgl = jnp.where(mask[None, None, None, :], sgl, NEG_INF)
-            w = jax.nn.softmax(sgl, axis=-1)
-            out = jnp.einsum("bhqk,bkhd->bqhd", w,
-                             v_exp.astype(jnp.float32)).astype(x.dtype)
+            out = _masked_decode_attention(q, ck, cv, mask, h)
     else:
         k_exp = _expand_kv(k, h)
         v_exp = _expand_kv(v, h)
@@ -295,6 +350,55 @@ def attention(ctx: Ctx, cfg: ArchConfig, p, x, positions,
             new_cache = {"k": ck, "v": cv, "pos": jnp.asarray(s, jnp.int32)}
     y = linear(ctx, "attn/wo", out.reshape(b, s, h * hd), p["wo"])
     return y, new_cache
+
+
+def _paged_attention_decode(ctx: Ctx, cfg: ArchConfig, q, k, v, cache):
+    """One-token attention over a paged block-table cache (ragged batch).
+
+    q/k/v: (R, 1, ·, hd) — already roped with per-request positions.  The
+    per-layer cache carries the page pool (``k_pages``/``v_pages``:
+    (P, page_size, KV, hd)) plus the batch-shared ``block_tables`` (R, M)
+    and ``seq_lens`` (R,) injected by lm_apply.  The current token's K/V
+    is scattered into page ``block_tables[r, seq_lens[r] // ps]`` before
+    attention, then each request attends its own prefix — the jnp oracle
+    gathers pages through the block table, the Pallas kernel
+    (kernels/flash_decode_paged.py) dereferences it per grid step.  Both
+    consume the same paged_kv_positions/paged_decode_attention_mask, so
+    they cannot disagree about live slots.  Sliding-window ring layouts
+    are not paged (the serving engine gates on ``cfg.sliding_window``).
+    """
+    assert not cfg.sliding_window, \
+        "paged decode supports linear caches only"
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    bt, sl = cache["block_tables"], cache["seq_lens"]
+    _, ps, kvh, hd = kp.shape
+    r, _, h, _ = q.shape
+    blocks = bt.shape[1]
+    n_slots = blocks * ps
+    # write this token's k/v at the per-request write position.  The
+    # clamp only ever bites for slots the engine has parked on its
+    # scratch page (capacity for live requests is sized at admission).
+    pos_w = jnp.minimum(sl, n_slots - 1)
+    pidx = bt[jnp.arange(r), pos_w // ps]
+    slot = pos_w % ps
+    kp = kp.at[pidx, slot].set(k[:, 0].astype(kp.dtype))
+    vp = vp.at[pidx, slot].set(v[:, 0].astype(vp.dtype))
+    new_cache = dict(cache, k_pages=kp, v_pages=vp)
+    kv_pos = paged_kv_positions(sl, n_slots)
+    mask = paged_decode_attention_mask(kv_pos, sl)
+    seq_sharded = (ctx.mesh is not None
+                   and "model" in ctx.mesh.axis_names
+                   and _axis_size(ctx.mesh, "model") > 1)
+    if ctx.use_kernels and not seq_sharded:
+        from repro.kernels.flash_decode_paged import flash_decode_paged
+        out = flash_decode_paged(q, kp, vp, bt, mask,
+                                 interpret=ctx.interpret).astype(q.dtype)
+    else:
+        # jnp oracle: gather each request's pages into contiguous K/V
+        kf = kp[bt].reshape(r, n_slots, kvh, hd)
+        vf = vp[bt].reshape(r, n_slots, kvh, hd)
+        out = _masked_decode_attention(q, kf, vf, mask, h)
+    return out, new_cache
 
 
 def init_attention_cache(cfg: ArchConfig, batch: int, seq_len: int,
@@ -709,10 +813,10 @@ def _moe_ep(ctx: Ctx, cfg: ArchConfig, p, x):
     n_loc_static = (b // max(1, dp)) * s
     body = ep_fn if (n_loc_static % tp == 0 and n_loc_static >= tp) \
         else ep_small_fn
-    fn = shard_map(body, mesh=mesh,
-                   in_specs=(x_spec, P(None, None), w_in_spec, w_in_spec,
-                             wd_spec),
-                   out_specs=x_spec, check_vma=False)
+    fn = _shard_map_unchecked(body, mesh=mesh,
+                              in_specs=(x_spec, P(None, None), w_in_spec,
+                                        w_in_spec, wd_spec),
+                              out_specs=x_spec)
     return fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
 
 

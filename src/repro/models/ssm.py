@@ -74,8 +74,13 @@ def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
     k = w.shape[0]
     if state is not None:
         window = jnp.concatenate([state, xbc], axis=1)       # (B,K,C)
-        y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
-                       w.astype(jnp.float32)) + b.astype(jnp.float32)
+        # accumulate in tap order, exactly like the full-sequence branch
+        # below: the decode step then produces bit-identical conv outputs
+        # to prefill, so chunked-vs-stepwise comparisons see only SSD-core
+        # differences, not conv reduction-order dust
+        y = sum(window[:, i].astype(jnp.float32)
+                * w[i].astype(jnp.float32) for i in range(k))
+        y = y + b.astype(jnp.float32)
         return jax.nn.silu(y)[:, None, :].astype(xbc.dtype), window[:, 1:]
     pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
     # sum of shifted copies — K is tiny (4), this lowers to K fused muls.
@@ -86,12 +91,24 @@ def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
 
 
 def _segsum(a: jnp.ndarray) -> jnp.ndarray:
-    """segsum(a)[..., t, s] = sum_{j=s+1..t} a[..., j]; -inf for s>t."""
+    """segsum(a)[..., t, s] = sum_{j=s+1..t} a[..., j]; -inf for s>t.
+
+    Computed by masked cumsum over the t axis, NOT as a difference of two
+    inclusive cumsums: the decay exponents are same-signed and accumulate
+    to O(chunk * |a|) magnitudes, so ``cs[t] - cs[s]`` loses
+    ``eps * |cs|`` absolutely to cancellation — the worst case is a
+    heavily padded final chunk, whose real steps all sit under the
+    largest |cs| span (tests/test_ssm.py chunked-vs-stepwise[48]).  The
+    masked-cumsum form builds each entry as a fresh short sum, keeping
+    the chunked path ~an order of magnitude closer to the stepwise
+    recurrence.
+    """
     l = a.shape[-1]
-    cs = jnp.cumsum(a, axis=-1)
-    diff = cs[..., :, None] - cs[..., None, :]
+    x = jnp.broadcast_to(a[..., :, None], a.shape + (l,))
+    x = jnp.where(jnp.tril(jnp.ones((l, l), bool), k=-1), x, 0.0)
+    seg = jnp.cumsum(x, axis=-2)
     mask = jnp.tril(jnp.ones((l, l), bool), k=0)
-    return jnp.where(mask, diff, NEG_INF)
+    return jnp.where(mask, seg, NEG_INF)
 
 
 def mamba2_apply(ctx: Ctx, cfg: ArchConfig, p, x,
@@ -164,11 +181,14 @@ def _ssd_chunked(cfg: ArchConfig, xc, bc, cc, dt, a, d_skip):
     da = (dtc * a[None, None, None, :]).transpose(0, 3, 1, 2)
     da_cs = jnp.cumsum(da, axis=-1)
     # intra-chunk (diagonal blocks)
-    lmat = jnp.exp(_segsum(da))                            # (B,H,nc,L,L)
+    seg = _segsum(da)                                      # (B,H,nc,L,L)
+    lmat = jnp.exp(seg)
     y_diag = jnp.einsum("bcln,bcsn,bhcls,bcsh,bcshp->bclhp",
                         cm, bm, lmat, dtc, xh)
-    # chunk-final states
-    decay_states = jnp.exp(da_cs[..., -1:] - da_cs)        # (B,H,nc,L)
+    # chunk-final states: decay from step l to chunk end is segsum's last
+    # row (sum_{j>l} da_j) — reusing it avoids the cancellation-prone
+    # ``da_cs[-1] - da_cs`` subtraction of two large cumsums
+    decay_states = jnp.exp(seg[..., -1, :])                # (B,H,nc,L)
     states = jnp.einsum("bcln,bhcl,bclh,bclhp->bchpn",
                         bm, decay_states, dtc, xh)
     # inter-chunk recurrence

@@ -200,8 +200,17 @@ def lm_apply(ctx: Ctx, cfg: ArchConfig, params, tokens, positions=None,
     b, s = x.shape[:2]
     if positions is None:
         if cache is not None and ctx.decode:
-            pos0 = _cache_pos(cfg, cache)
-            positions = pos0 + jnp.arange(s)
+            if "block_tables" in cache:
+                # paged cache (one sentinel key for the whole-model dict,
+                # matching the scan_cache branch below; the per-layer dict
+                # is detected by "k_pages" in layers.attention): ragged
+                # batch, per-request positions.  The serving engine owns
+                # the seq_lens increment (it knows which slots are
+                # active); lm_apply only reads them.
+                positions = cache["seq_lens"][:, None] + jnp.arange(s)[None]
+            else:
+                pos0 = _cache_pos(cfg, cache)
+                positions = pos0 + jnp.arange(s)
         else:
             positions = jnp.arange(s)
     x = shard_hidden(ctx, x)
@@ -211,14 +220,24 @@ def lm_apply(ctx: Ctx, cfg: ArchConfig, params, tokens, positions=None,
     if cfg.family == "hybrid":
         x, new_cache = _hybrid_stack(ctx, cfg, params, x, positions, cache)
     else:
+        paged = cache is not None and "block_tables" in cache
+
         def body(xcarry, xs):
             lp, lc = xs
+            if paged:
+                # block tables / seq_lens are batch state shared by every
+                # layer — injected here instead of stacked per layer
+                lc = dict(lc, block_tables=cache["block_tables"],
+                          seq_lens=cache["seq_lens"])
             y, nc = block_fn(ctx, cfg, lp, xcarry, positions, lc)
+            if paged:
+                nc = {"k_pages": nc["k_pages"], "v_pages": nc["v_pages"]}
             return y, nc
 
         body = _remat(cfg, body)
-        scan_cache = cache["blocks"] if (cfg.family == "ssm"
-                                         and cache is not None) else cache
+        scan_cache = cache["blocks"] if (cache is not None
+                                         and (cfg.family == "ssm" or paged)
+                                         ) else cache
         if cfg.scan_layers:
             if cache is None:
                 x, new_scan_cache = jax.lax.scan(
@@ -242,6 +261,10 @@ def lm_apply(ctx: Ctx, cfg: ArchConfig, params, tokens, positions=None,
             new_cache = None
         elif cfg.family == "ssm":
             new_cache = {"blocks": new_scan_cache, "pos": cache["pos"] + s}
+        elif paged:
+            new_cache = {"blocks": new_scan_cache,
+                         "block_tables": cache["block_tables"],
+                         "seq_lens": cache["seq_lens"]}
         else:
             new_cache = new_scan_cache
 

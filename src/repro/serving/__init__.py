@@ -1,0 +1,19 @@
+"""Serving subsystem: paged KV-cache pool + continuous-batching engine.
+
+- paged_cache: fixed-size page pool, host-side free-list allocator,
+  per-request block tables (vLLM-style paging, TPU-shaped layout).
+- scheduler: FIFO request queue with admission-on-free-pages and
+  page reclamation when requests complete.
+- engine: drives prefill-into-pages + fixed-length decode scan segments,
+  swapping finished requests for queued ones at segment boundaries.
+"""
+
+from repro.serving.paged_cache import (PageAllocator, PagedCacheConfig,
+                                       TRASH_PAGE, init_paged_cache)
+from repro.serving.scheduler import ContinuousBatchingScheduler, Request
+from repro.serving.engine import PagedServingEngine
+
+__all__ = [
+    "PageAllocator", "PagedCacheConfig", "TRASH_PAGE", "init_paged_cache",
+    "ContinuousBatchingScheduler", "Request", "PagedServingEngine",
+]

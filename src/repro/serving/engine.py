@@ -1,0 +1,206 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+One engine owns: a paged cache pool (serving/paged_cache.py), a scheduler
+(serving/scheduler.py), and three jitted entry points —
+
+- ``prefill``: batch-1 prefill of one admitted request into a contiguous
+  scratch cache sized to a whole number of pages, returning the first
+  greedy token and the prompt K/V reshaped into page-sized chunks;
+- ``write_pages``: scatter of those chunks into the request's allocated
+  physical pages (all layers at once, donated pool);
+- ``segment``: ``segment_len`` decode steps fused into one
+  ``jax.lax.scan`` dispatch over the whole slot batch, with greedy
+  sampling, per-slot active masks, and seq_lens advancement carried
+  in-graph.
+
+The host loop runs at segment boundaries only: pull back the tiny control
+state (tokens, active, n_gen, seq_lens), retire finished requests (pages
+to the free list, block-table row parked on the scratch page), admit
+queued ones into the freed slots/pages, and dispatch the next segment.
+KV state never moves on admission or eviction — only block-table rows
+change — which is what lets one slot batch serve an arrival process whose
+requests start and finish at different times (continuous batching) while
+paying the contiguous path's per-step cost for the batch, not per
+request.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.paged_cache import (PagedCacheConfig, TRASH_PAGE,
+                                       init_paged_cache, supports_paging)
+from repro.serving.scheduler import ContinuousBatchingScheduler, Request
+
+
+class PagedServingEngine:
+    def __init__(self, model, pcfg: PagedCacheConfig,
+                 cache_dtype=jnp.bfloat16):
+        if not supports_paging(model.cfg):
+            raise ValueError(f"{model.cfg.name} does not support the "
+                             f"paged decode path")
+        self.model = model
+        self.pcfg = pcfg
+        self.cache_dtype = cache_dtype
+        self._prefill = jax.jit(self._prefill_impl)
+        self._write_pages = jax.jit(self._write_pages_impl,
+                                    donate_argnums=(0,))
+        self._segment = jax.jit(self._segment_impl, donate_argnums=(1,))
+
+    # ------------------------------------------------------------ jitted
+    def _prefill_impl(self, params, prompt):
+        """prompt: (1, S).  Contiguous scratch cache rounded up to whole
+        pages so the K/V reshapes to (L, n_pages, page_size, KV, hd)."""
+        s = prompt.shape[1]
+        cache_len = self.pcfg.pages_for(s) * self.pcfg.page_size
+        cache, _ = self.model.init_cache(1, cache_len, self.cache_dtype)
+        logits, cache = self.model.prefill(params, {"tokens": prompt},
+                                           cache)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        n_layers, _, _, kv, hd = cache["k"].shape
+        shape = (n_layers, -1, self.pcfg.page_size, kv, hd)
+        return tok, cache["k"].reshape(shape), cache["v"].reshape(shape)
+
+    def _write_pages_impl(self, blocks, pk, pv, rows):
+        """Scatter page chunks (L, n, ps, KV, hd) into physical ``rows``."""
+        return {"k_pages": blocks["k_pages"].at[:, rows].set(pk),
+                "v_pages": blocks["v_pages"].at[:, rows].set(pv)}
+
+    def _segment_impl(self, params, cache, tok, active, n_gen, max_new):
+        """``segment_len`` decode steps as one fused scan dispatch.
+
+        Inactive slots still run (the batch is dense) but their tokens are
+        masked, their seq_lens hold, and their writes land on pages they
+        still own or on the scratch page — never on a reclaimed page.
+        """
+        def step(carry, _):
+            cache, tok, active, n_gen = carry
+            logits, cache = self.model.decode_step(params, cache, tok)
+            nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            nxt = jnp.where(active[:, None], nxt, 0)
+            emitted = active
+            live = active.astype(jnp.int32)
+            n_gen = n_gen + live
+            cache = dict(cache, seq_lens=cache["seq_lens"] + live)
+            active = active & (n_gen < max_new)
+            return (cache, nxt, active, n_gen), (nxt[:, 0], emitted)
+
+        (cache, tok, active, n_gen), (toks, emits) = jax.lax.scan(
+            step, (cache, tok, active, n_gen), None,
+            length=self.pcfg.segment_len)
+        return cache, tok, active, n_gen, toks, emits
+
+    # --------------------------------------------------------- host loop
+    def run(self, requests: list[Request], params) -> dict:
+        """Serve ``requests`` (honoring their ``arrival`` offsets) to
+        completion.  Mutates each request in place (tokens, t_admitted,
+        t_done, all relative to engine start) and returns run counters.
+        """
+        pcfg = self.pcfg
+        sched = ContinuousBatchingScheduler(pcfg)
+        cache, _ = init_paged_cache(self.model.cfg, pcfg, self.cache_dtype)
+        r, m = pcfg.max_slots, pcfg.max_blocks
+        bt = np.full((r, m), TRASH_PAGE, np.int32)
+        seq_lens = np.zeros((r,), np.int32)
+        tok = np.zeros((r, 1), np.int32)
+        active = np.zeros((r,), bool)
+        n_gen = np.zeros((r,), np.int32)
+        max_new = np.ones((r,), np.int32)
+        timer = time.perf_counter
+        queue = sorted(requests, key=lambda q: q.arrival)
+        nxt_arrival = 0
+        n_segments = 0
+        prefill_s = 0.0
+        decode_s = 0.0
+        t0 = timer()
+
+        def retire_finished(now: float) -> None:
+            for slot, req in list(sched.running.items()):
+                if n_gen[slot] >= req.max_new_tokens:
+                    req.t_done = now
+                    sched.complete(slot)
+                    bt[slot] = TRASH_PAGE
+                    seq_lens[slot] = 0
+                    active[slot] = False
+                    n_gen[slot] = 0
+
+        while nxt_arrival < len(queue) or sched.has_work:
+            now = timer() - t0
+            while (nxt_arrival < len(queue)
+                   and queue[nxt_arrival].arrival <= now):
+                sched.submit(queue[nxt_arrival])
+                nxt_arrival += 1
+            for req in sched.try_admit():
+                t_pf = timer()
+                tok1, pk, pv = self._prefill(
+                    params, jnp.asarray(req.prompt[None]))
+                n_pp = pcfg.pages_for(req.prompt_len)
+                rows = jnp.asarray(np.asarray(req.pages[:n_pp], np.int32))
+                cache = dict(cache, blocks=self._write_pages(
+                    cache["blocks"], pk, pv, rows))
+                slot = req.slot
+                bt[slot] = TRASH_PAGE
+                bt[slot, :len(req.pages)] = req.pages
+                seq_lens[slot] = req.prompt_len
+                tok[slot] = np.asarray(tok1)[0]
+                n_gen[slot] = 1
+                max_new[slot] = req.max_new_tokens
+                active[slot] = req.max_new_tokens > 1
+                req.tokens = [int(tok1[0, 0])]
+                req.t_admitted = timer() - t0
+                prefill_s += timer() - t_pf
+            retire_finished(timer() - t0)
+            if not sched.running:
+                if nxt_arrival < len(queue):
+                    # the pre-sorted queue's next arrival is the only
+                    # possible event while idle: sleep the whole gap
+                    wait = queue[nxt_arrival].arrival - (timer() - t0)
+                    if wait > 0:
+                        time.sleep(wait)
+                continue
+
+            t_seg = timer()
+            cache = dict(cache, block_tables=jnp.asarray(bt),
+                         seq_lens=jnp.asarray(seq_lens))
+            cache, tok_d, act_d, gen_d, toks, emits = self._segment(
+                params, cache, jnp.asarray(tok), jnp.asarray(active),
+                jnp.asarray(n_gen), jnp.asarray(max_new))
+            n_segments += 1
+            toks = np.asarray(toks)
+            decode_s += timer() - t_seg
+            emits = np.asarray(emits)
+            # np.array (copy): host bookkeeping mutates these in place
+            tok = np.array(tok_d)
+            active = np.array(act_d)
+            n_gen = np.array(gen_d)
+            seq_lens = np.array(cache["seq_lens"])
+            for slot, req in sched.running.items():
+                req.tokens.extend(
+                    int(t) for t in toks[emits[:, slot], slot])
+            retire_finished(timer() - t0)
+
+        return {"n_segments": n_segments,
+                "n_admitted": sched.n_admitted,
+                "n_finished": len(sched.finished),
+                "prefill_s": prefill_s,    # summed batch-1 admissions
+                "decode_s": decode_s,      # summed segment dispatches
+                "wall_s": timer() - t0}
+
+
+def warmup(engine: PagedServingEngine, params, prompt_len: int,
+           max_new_tokens: int) -> None:
+    """Compile prefill + segment outside any timed region.
+
+    One call warms exactly one prompt shape; jitted prefill/page-write
+    specialize on the prompt's page count, so call once per distinct
+    ``pages_for(prompt_len)`` you intend to serve (the segment fns are
+    shape-stable across calls).
+    """
+    req = Request(rid="warmup",
+                  prompt=np.zeros((prompt_len,), np.int32),
+                  max_new_tokens=max_new_tokens)
+    engine.run([req], params)

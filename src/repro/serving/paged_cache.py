@@ -1,0 +1,179 @@
+"""Paged KV-cache: fixed-size page pool + free-list allocator + block tables.
+
+The contiguous decode cache (models/layers.py::init_attention_cache) ties
+one request to one ``(cache_len, KV, hd)`` strip for its whole lifetime —
+memory is reserved for the *longest possible* generation of the *whole
+batch*, and a finished request's strip is dead weight until the entire
+batch drains.  Paging decouples the two: KV state lives in a shared pool
+of ``page_size``-token pages, each request owns an ordered list of pages
+(its *block table* row), and completion returns pages to a free list the
+next admission reuses immediately.  That is the memory architecture the
+continuous-batching scheduler (serving/scheduler.py) allocates against.
+
+Layout per layer: ``k_pages``/``v_pages``: (n_pages, page_size, KV, hd),
+stacked over layers by :func:`init_paged_cache` exactly like the
+contiguous cache so lm_apply's layer scan carries it unchanged.  Physical
+page 0 is reserved as the *scratch page* (:data:`TRASH_PAGE`): empty or
+drained batch slots keep running inside a jitted decode segment, and
+their (masked, discarded) writes land there instead of corrupting pages
+the allocator may already have handed to another request.
+
+The page size is an optimization knob like any tile size: small pages
+waste less pool memory on partial tails (internal fragmentation ~
+``page_size/2`` tokens per request) but mean more grid steps and more
+page-granular DMAs for the paged decode kernel; big pages invert the
+trade.  It is tuned per shape through kernels/autotune.py
+(``flash_decode_paged``) and read back via :func:`preferred_page_size`
+at pool-construction time — the layout is fixed once allocated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+TRASH_PAGE = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Pool geometry + scheduler cadence for one serving engine."""
+    page_size: int = 16
+    n_pages: int = 64        # physical pages per layer, incl. the scratch page
+    max_slots: int = 8       # in-flight batch width R
+    max_blocks: int = 8      # block-table width M (logical pages per request)
+    segment_len: int = 8     # decode steps between scheduler syncs
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache slots."""
+        return -(-int(n_tokens) // self.page_size)
+
+    @property
+    def capacity_tokens(self) -> int:
+        """Max cache tokens a single request can hold (block-table width)."""
+        return self.max_blocks * self.page_size
+
+    @property
+    def allocatable_pages(self) -> int:
+        return self.n_pages - 1  # page 0 is the scratch page
+
+    def validate_request(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Pages a request needs for its whole lifetime; raises if it can
+        never fit.  +1 slot: the last decode step still writes its token's
+        K/V before the engine retires the request."""
+        need_tokens = prompt_len + max_new_tokens + 1
+        if need_tokens > self.capacity_tokens:
+            raise ValueError(
+                f"request needs {need_tokens} cache slots > capacity "
+                f"{self.capacity_tokens} (max_blocks={self.max_blocks} x "
+                f"page_size={self.page_size})")
+        need = self.pages_for(need_tokens)
+        if need > self.allocatable_pages:
+            raise ValueError(f"request needs {need} pages > pool "
+                             f"{self.allocatable_pages}")
+        return need
+
+
+class PageAllocator:
+    """Host-side free-list allocator over the physical page pool.
+
+    Page ids are handed out lowest-first and returned pages are reused
+    before fresh ones — the pool working set stays compact, and tests can
+    assert literal page-id reuse after a request completes.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("need at least one allocatable page "
+                             "beyond the reserved scratch page")
+        self._free = list(range(n_pages - 1, 0, -1))  # pop() -> ascending
+        self._held: set[int] = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """``n`` pages, or None (allocation is all-or-nothing)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._held.update(pages)
+        return pages
+
+    def release(self, pages: list[int]) -> None:
+        for p in pages:
+            if p not in self._held:
+                raise ValueError(f"double free or foreign page {p}")
+            self._held.discard(p)
+        # freed pages go to the top of the stack: first to be reused
+        self._free.extend(sorted(pages, reverse=True))
+
+
+def supports_paging(cfg: ArchConfig) -> bool:
+    """Paged decode covers the dense-attention families with linear
+    caches.  Sliding-window ring buffers recycle slots *within* a request
+    (a different page-reuse problem — ROADMAP open item), MLA caches
+    compressed latents, and SSM/hybrid families carry recurrent state.
+
+    getattr-defensive like the rest of tasks/tune.py::derive_problems —
+    TUNE probes duck-typed handle configs that may carry only the
+    attention fields.
+    """
+    return (getattr(cfg, "family", None) in ("dense", "moe", "vlm")
+            and not getattr(cfg, "use_mla", False)
+            and not getattr(cfg, "sliding_window", 0)
+            and not getattr(cfg, "enc_dec", False))
+
+
+def init_paged_cache(cfg: ArchConfig, pcfg: PagedCacheConfig,
+                     dtype=jnp.bfloat16):
+    """Whole-model paged cache pytree (+ logical axes).
+
+    ``blocks`` stacks the per-layer page pools on a leading layer axis —
+    the same shape contract as init_lm_cache, so lm_apply's scan carries
+    it directly; ``block_tables``/``seq_lens`` are batch state shared by
+    every layer and injected per layer inside the scan body.
+    """
+    if not supports_paging(cfg):
+        raise ValueError(f"{cfg.name}: family={cfg.family} "
+                         f"window={cfg.sliding_window} mla={cfg.use_mla} "
+                         f"does not support the paged decode path")
+    shape = (cfg.n_layers, pcfg.n_pages, pcfg.page_size,
+             cfg.n_kv_heads, cfg.hd)
+    cache = {
+        "blocks": {"k_pages": jnp.zeros(shape, dtype),
+                   "v_pages": jnp.zeros(shape, dtype)},
+        "block_tables": jnp.full((pcfg.max_slots, pcfg.max_blocks),
+                                 TRASH_PAGE, jnp.int32),
+        "seq_lens": jnp.zeros((pcfg.max_slots,), jnp.int32),
+    }
+    axes = {
+        "blocks": {"k_pages": ("layers", "kv_pages", None, "kv_heads",
+                               "head_dim"),
+                   "v_pages": ("layers", "kv_pages", None, "kv_heads",
+                               "head_dim")},
+        "block_tables": (None, None),
+        "seq_lens": (None,),
+    }
+    return cache, axes
+
+
+def preferred_page_size(cfg: ArchConfig, pcfg_slots: int,
+                        max_len: int) -> int:
+    """Tuned page size for this arch's decode shape, from the autotuner's
+    persisted cache (pure read — tuning happens in the TUNE task or the
+    ``tuned_*`` wrappers, never at pool-construction time).  Falls back
+    to the kernel default on a miss."""
+    from repro.kernels import autotune
+    prob = autotune.flash_decode_paged_problem(
+        pcfg_slots, cfg.n_heads, cfg.n_kv_heads, cfg.hd, max_len,
+        str(cfg.adt))
+    tile = autotune.cached_config("flash_decode_paged", prob,
+                                  relax=("slots", "max_len"))
+    return int(tile["page_size"])

@@ -1,0 +1,102 @@
+"""Continuous-batching scheduler: FIFO admission gated on free pages.
+
+The engine (serving/engine.py) decodes in fixed-length scan *segments*;
+this scheduler is the host-side brain that runs at segment boundaries:
+
+- ``submit`` queues a request (validated against pool capacity once);
+- ``try_admit`` moves queued requests into free batch slots while the
+  page allocator can cover each request's whole lifetime
+  (``prompt + max_new + 1`` tokens) — all-or-nothing, FIFO order (no
+  overtaking: a small request never starves a big head-of-line one);
+- ``complete`` retires a finished request, returning its pages to the
+  free list — the very next ``try_admit`` can hand them to a queued
+  request, which is the continuous-batching memory win over the
+  contiguous cache's drain-the-whole-batch behavior.
+
+Growth-on-demand admission (admit on prompt pages only, allocate decode
+pages as generation proceeds, preempt on pool exhaustion) packs tighter
+but needs in-flight preemption; it is a ROADMAP open item.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import numpy as np
+
+from repro.serving.paged_cache import PageAllocator, PagedCacheConfig
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its runtime bookkeeping."""
+    rid: Any
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int
+    arrival: float = 0.0               # offset from engine start (bench)
+
+    # runtime state, owned by the scheduler/engine
+    slot: int | None = None
+    pages: list[int] | None = None
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    t_admitted: float | None = None
+    t_done: float | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return self.t_done is not None
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, pcfg: PagedCacheConfig):
+        self.pcfg = pcfg
+        self.allocator = PageAllocator(pcfg.n_pages)
+        self.pending: deque[Request] = deque()
+        self.running: dict[int, Request] = {}       # slot -> request
+        self.free_slots = sorted(range(pcfg.max_slots))
+        self.finished: list[Request] = []
+        self.n_admitted = 0
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending or self.running)
+
+    def submit(self, req: Request) -> None:
+        self.pcfg.validate_request(req.prompt_len, req.max_new_tokens)
+        self.pending.append(req)
+
+    def try_admit(self) -> list[Request]:
+        """Admit queued requests while a slot and enough pages are free."""
+        admitted = []
+        while self.pending and self.free_slots:
+            req = self.pending[0]
+            need = self.pcfg.pages_for(req.prompt_len
+                                       + req.max_new_tokens + 1)
+            pages = self.allocator.alloc(need)
+            if pages is None:
+                break                     # FIFO: wait for pages to free up
+            self.pending.popleft()
+            req.pages = pages
+            req.slot = self.free_slots.pop(0)
+            self.running[req.slot] = req
+            self.n_admitted += 1
+            admitted.append(req)
+        return admitted
+
+    def complete(self, slot: int) -> Request:
+        """Retire the request in ``slot``; its pages are free for the next
+        admission immediately."""
+        req = self.running.pop(slot)
+        self.allocator.release(req.pages)
+        req.pages = None
+        req.slot = None
+        self.free_slots.append(slot)
+        self.free_slots.sort()
+        self.finished.append(req)
+        return req

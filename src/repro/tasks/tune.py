@@ -127,6 +127,9 @@ def derive_problems(handle: DNNHandle, *, batch_m: int = 128,
     - flash_decode: the serving hot loop — one-token attention over the
       arch's decode cache (window-bounded under sliding-window attention),
       so TUNE picks the kv-split the deployed generate loop will run.
+    - flash_decode_paged: the continuous-batching hot loop (linear caches
+      only) — TUNE picks the page size the paged serving engine lays its
+      pool out with.
     Largest problems first, capped at ``max_problems``.
     """
     from repro.kernels import autotune
@@ -184,5 +187,16 @@ def derive_problems(handle: DNNHandle, *, batch_m: int = 128,
         # survives the max_problems cap alongside the big matmuls
         sized.append((seq * cache_len * cfg.n_heads,
                       {"kernel": "flash_decode", **dprob}))
+        from repro.serving.paged_cache import supports_paging
+        if supports_paging(cfg):
+            # paged continuous-batching decode (dense-attention linear
+            # caches only — the same gate the serving engine enforces, so
+            # TUNE never spends trials on a kernel the arch cannot
+            # dispatch): the tuned page_size reaches the engine through
+            # serving/paged_cache.preferred_page_size at pool build time.
+            pprob = autotune.flash_decode_paged_problem(
+                db, cfg.n_heads, cfg.n_kv_heads, hd, cache_len, adt)
+            sized.append((seq * cache_len * cfg.n_heads,
+                          {"kernel": "flash_decode_paged", **pprob}))
     sized.sort(key=lambda sp: -sp[0])
     return [p for _, p in sized[:max_problems]]

@@ -1,0 +1,366 @@
+"""Paged KV-cache + continuous batching: allocator, kernel-vs-oracle,
+paged-vs-contiguous token equality, page reuse, scheduler admit/evict."""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data.synthetic import lm_tokens
+from repro.kernels.flash_decode_paged import flash_decode_paged
+from repro.launch.serve import generate, make_serve_fns
+from repro.models import layers as L
+from repro.models.api import build_model
+from repro.serving import (ContinuousBatchingScheduler, PageAllocator,
+                           PagedCacheConfig, PagedServingEngine, Request,
+                           TRASH_PAGE, init_paged_cache)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------- allocator
+class TestPageAllocator:
+    def test_alloc_free_reuse(self):
+        a = PageAllocator(8)                       # pages 1..7 allocatable
+        p1 = a.alloc(3)
+        assert p1 == [1, 2, 3]
+        assert a.n_free == 4
+        a.release(p1)
+        assert a.n_free == 7
+        # freed pages are reused first, lowest-first
+        assert a.alloc(2) == [1, 2]
+
+    def test_never_hands_out_trash_page(self):
+        a = PageAllocator(4)
+        assert TRASH_PAGE not in a.alloc(3)
+
+    def test_all_or_nothing(self):
+        a = PageAllocator(4)
+        assert a.alloc(3) is not None
+        assert a.alloc(1) is None                  # exhausted
+        assert a.n_free == 0
+
+    def test_double_free_rejected(self):
+        a = PageAllocator(4)
+        p = a.alloc(2)
+        a.release(p)
+        with pytest.raises(ValueError):
+            a.release(p)
+
+    def test_capacity_validation(self):
+        pcfg = PagedCacheConfig(page_size=4, n_pages=8, max_slots=2,
+                                max_blocks=2)
+        with pytest.raises(ValueError):
+            pcfg.validate_request(prompt_len=8, max_new_tokens=4)
+        assert pcfg.validate_request(prompt_len=4, max_new_tokens=3) == 2
+
+
+# ------------------------------------------------- position/mask helpers
+class TestPagedMaskHelpers:
+    def test_matches_contiguous_helpers(self):
+        """Per-request paged positions/mask rows must equal the linear
+        contiguous-cache helpers at the same position."""
+        n_slots = 24
+        seq_lens = jnp.asarray([0, 5, 23], jnp.int32)
+        kv_pos = L.paged_kv_positions(seq_lens, n_slots)
+        mask = L.paged_decode_attention_mask(kv_pos, seq_lens)
+        for i, pos in enumerate([0, 5, 23]):
+            ref_pos = L.kv_positions_for_cache(jnp.asarray(pos), n_slots, 0)
+            ref_mask = L.decode_attention_mask(ref_pos, pos, 0)
+            assert bool(jnp.all(kv_pos[i] == ref_pos))
+            assert bool(jnp.all(mask[i] == ref_mask))
+
+    def test_ragged_rows(self):
+        seq_lens = jnp.asarray([2, 7], jnp.int32)
+        mask = L.paged_decode_attention_mask(
+            L.paged_kv_positions(seq_lens, 8), seq_lens)
+        assert mask.astype(int).sum(axis=1).tolist() == [3, 8]
+
+
+# ------------------------------------------------------ kernel vs oracle
+def _paged_problem(key, slots, h, kvh, d, page_size, blocks, seq_lens):
+    """Random pages + a scrambled block table + the shared mask."""
+    ks = jax.random.split(key, 4)
+    n_pages = slots * blocks + 1
+    q = jax.random.normal(ks[0], (slots, 1, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (n_pages, page_size, kvh, d),
+                           jnp.float32)
+    vp = jax.random.normal(ks[2], (n_pages, page_size, kvh, d),
+                           jnp.float32)
+    perm = jax.random.permutation(ks[3], n_pages - 1) + 1
+    bt = perm[:slots * blocks].reshape(slots, blocks).astype(jnp.int32)
+    sl = jnp.asarray(seq_lens, jnp.int32)
+    mask = L.paged_decode_attention_mask(
+        L.paged_kv_positions(sl, blocks * page_size), sl)
+    return q, kp, vp, bt, mask
+
+
+def _oracle(q, kp, vp, bt, mask):
+    slots, _, h, d = q.shape
+    _, ps, kvh, _ = kp.shape
+    blocks = bt.shape[1]
+    kf = kp[bt].reshape(slots, blocks * ps, kvh, d)
+    vf = vp[bt].reshape(slots, blocks * ps, kvh, d)
+    k_exp = L._expand_kv(kf, h)
+    v_exp = L._expand_kv(vf, h)
+    s = jnp.einsum("bqhd,bkhd->bhqk",
+                   q.astype(jnp.float32) / math.sqrt(d),
+                   k_exp.astype(jnp.float32))
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v_exp.astype(jnp.float32))
+
+
+class TestPagedKernelVsOracle:
+    @pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2), (7, 1)])
+    @pytest.mark.parametrize("page_size", [4, 8, 16])
+    def test_gqa_and_page_size_grid(self, h, kvh, page_size):
+        slots, blocks, d = 3, 3, 8
+        cap = blocks * page_size
+        seq_lens = [0, cap // 2, cap - 1]          # empty-ish / mid / full
+        q, kp, vp, bt, mask = _paged_problem(
+            KEY, slots, h, kvh, d, page_size, blocks, seq_lens)
+        out = flash_decode_paged(q, kp, vp, bt, mask, interpret=True)
+        ref = _oracle(q, kp, vp, bt, mask)
+        assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+    @pytest.mark.parametrize("seq_lens", [[0, 1, 2, 3], [5, 17, 9, 30]])
+    def test_ragged_lengths(self, seq_lens):
+        slots, blocks, ps, h, kvh, d = 4, 4, 8, 4, 2, 8
+        q, kp, vp, bt, mask = _paged_problem(
+            jax.random.PRNGKey(7), slots, h, kvh, d, ps, blocks, seq_lens)
+        out = flash_decode_paged(q, kp, vp, bt, mask, interpret=True)
+        ref = _oracle(q, kp, vp, bt, mask)
+        assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+    def test_scrambled_vs_identity_block_table(self):
+        """Physical page placement must be invisible: the same logical
+        K/V through a scrambled table equals an identity layout."""
+        slots, blocks, ps, h, kvh, d = 2, 3, 4, 4, 2, 8
+        seq_lens = [7, 11]
+        q, kp, vp, bt, mask = _paged_problem(
+            jax.random.PRNGKey(3), slots, h, kvh, d, ps, blocks, seq_lens)
+        ident_bt = 1 + jnp.arange(slots * blocks,
+                                  dtype=jnp.int32).reshape(slots, blocks)
+        kp_i = kp.at[ident_bt.reshape(-1)].set(kp[bt.reshape(-1)])
+        vp_i = vp.at[ident_bt.reshape(-1)].set(vp[bt.reshape(-1)])
+        out_s = flash_decode_paged(q, kp, vp, bt, mask, interpret=True)
+        out_i = flash_decode_paged(q, kp_i, vp_i, ident_bt, mask,
+                                   interpret=True)
+        assert float(jnp.max(jnp.abs(out_s - out_i))) < 1e-6
+
+
+# ------------------------------------- engine: paged vs contiguous tokens
+def _smoke_setup():
+    cfg = get_config("qwen2_7b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    return cfg, model, params
+
+
+def _prompts(cfg, n, prompt_len, seed=1):
+    return np.asarray(lm_tokens(n * prompt_len, cfg.vocab_size, seed=seed)
+                      ).reshape(n, prompt_len).astype(np.int32)
+
+
+def _contiguous_tokens(model, params, prompts, gen):
+    fns = make_serve_fns(model)
+    out = {}
+    for i in range(prompts.shape[0]):
+        toks = generate(model, params, jnp.asarray(prompts[i:i + 1]), gen,
+                        prompts.shape[1] + gen + 1, scan=True, fns=fns)
+        out[i] = [int(t) for t in np.asarray(toks)[0]]
+    return out
+
+
+class TestPagedEngineTokens:
+    @pytest.mark.parametrize("page_size", [8, 16, 32])
+    def test_tokens_equal_contiguous_across_page_sizes(self, page_size):
+        cfg, model, params = _smoke_setup()
+        prompt_len, gen, n = 16, 9, 3
+        prompts = _prompts(cfg, n, prompt_len)
+        base = _contiguous_tokens(model, params, prompts, gen)
+        blocks = -(-(prompt_len + gen + 1) // page_size)
+        pcfg = PagedCacheConfig(page_size=page_size,
+                                n_pages=2 * blocks * 2 + 1,
+                                max_slots=2, max_blocks=blocks,
+                                segment_len=4)
+        eng = PagedServingEngine(model, pcfg)
+        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=gen)
+                for i in range(n)]
+        eng.run(reqs, params)
+        for r in reqs:
+            assert r.tokens == base[r.rid], (page_size, r.rid)
+
+    def test_kernel_path_tokens_equal_oracle_path(self):
+        cfg, model, params = _smoke_setup()
+        model_k = build_model(cfg, use_kernels=True, interpret=True)
+        prompt_len, gen, n = 16, 8, 3
+        prompts = _prompts(cfg, n, prompt_len, seed=5)
+        pcfg = PagedCacheConfig(page_size=8, n_pages=16, max_slots=2,
+                                max_blocks=4, segment_len=4)
+        res = {}
+        for name, mdl in (("oracle", model), ("kernel", model_k)):
+            reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=gen)
+                    for i in range(n)]
+            PagedServingEngine(mdl, pcfg).run(reqs, params)
+            res[name] = {r.rid: r.tokens for r in reqs}
+        assert res["oracle"] == res["kernel"]
+
+    def test_ragged_max_new_tokens(self):
+        """Requests finishing at different steps: each still matches its
+        own contiguous reference."""
+        cfg, model, params = _smoke_setup()
+        prompt_len = 16
+        gens = [3, 11, 7, 5]
+        prompts = _prompts(cfg, len(gens), prompt_len, seed=9)
+        fns = make_serve_fns(model)
+        base = {}
+        for i, g in enumerate(gens):
+            toks = generate(model, params, jnp.asarray(prompts[i:i + 1]),
+                            g, prompt_len + g + 1, scan=True, fns=fns)
+            base[i] = [int(t) for t in np.asarray(toks)[0]]
+        pcfg = PagedCacheConfig(page_size=8, n_pages=16, max_slots=3,
+                                max_blocks=4, segment_len=4)
+        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=g)
+                for i, g in enumerate(gens)]
+        PagedServingEngine(model, pcfg).run(reqs, params)
+        for r in reqs:
+            assert len(r.tokens) == gens[r.rid]
+            assert r.tokens == base[r.rid]
+
+    def test_page_reuse_after_completion(self):
+        """A pool sized for ~one request at a time forces later requests
+        onto recycled pages; tokens must stay correct."""
+        cfg, model, params = _smoke_setup()
+        prompt_len, gen, n = 16, 6, 4
+        prompts = _prompts(cfg, n, prompt_len, seed=3)
+        base = _contiguous_tokens(model, params, prompts, gen)
+        pcfg = PagedCacheConfig(page_size=8, n_pages=4, max_slots=2,
+                                max_blocks=3, segment_len=2)
+        # pages_for(16+6+1)=3 = entire allocatable pool: strictly serial
+        # admission, every admission after the first reuses freed pages
+        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=gen)
+                for i in range(n)]
+        eng = PagedServingEngine(model, pcfg)
+        eng.run(reqs, params)
+        for r in reqs:
+            assert r.tokens == base[r.rid]
+
+
+# -------------------------------------------------------------- scheduler
+class TestScheduler:
+    def test_admit_evict_across_segments(self):
+        """More requests than slots: admissions must be spread over the
+        run (continuous batching), not all up front, and every request
+        completes with freed pages accounted for."""
+        cfg, model, params = _smoke_setup()
+        prompt_len, gen, n = 16, 6, 5
+        prompts = _prompts(cfg, n, prompt_len, seed=11)
+        pcfg = PagedCacheConfig(page_size=8, n_pages=8, max_slots=2,
+                                max_blocks=3, segment_len=2)
+        eng = PagedServingEngine(model, pcfg)
+        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=gen)
+                for i in range(n)]
+        stats = eng.run(reqs, params)
+        assert stats["n_finished"] == n
+        assert all(len(r.tokens) == gen for r in reqs)
+        # 5 requests through 2 slots cannot be co-resident: admissions
+        # must span multiple scheduler syncs
+        admit_times = sorted(r.t_admitted for r in reqs)
+        done_times = sorted(r.t_done for r in reqs)
+        assert admit_times[-1] > done_times[0]
+
+    def test_admission_blocks_on_pages_not_just_slots(self):
+        pcfg = PagedCacheConfig(page_size=8, n_pages=4, max_slots=4,
+                                max_blocks=3)
+        sched = ContinuousBatchingScheduler(pcfg)
+        for i in range(3):
+            sched.submit(Request(rid=i, prompt=np.zeros(8, np.int32),
+                                 max_new_tokens=8))
+        admitted = sched.try_admit()
+        # each request needs pages_for(8+8+1)=3 pages; pool has 3 free
+        assert len(admitted) == 1
+        assert sched.pending and sched.free_slots
+        sched.complete(admitted[0].slot)
+        assert len(sched.try_admit()) == 1
+
+    def test_fifo_no_overtaking(self):
+        pcfg = PagedCacheConfig(page_size=8, n_pages=4, max_slots=4,
+                                max_blocks=3)
+        sched = ContinuousBatchingScheduler(pcfg)
+        big = Request(rid="big", prompt=np.zeros(16, np.int32),
+                      max_new_tokens=7)
+        small = Request(rid="small", prompt=np.zeros(4, np.int32),
+                        max_new_tokens=2)
+        filler = Request(rid="filler", prompt=np.zeros(8, np.int32),
+                         max_new_tokens=6)
+        sched.submit(filler)
+        assert [r.rid for r in sched.try_admit()] == ["filler"]  # 2 pages
+        sched.submit(big)      # needs 3 pages, only 1 free
+        sched.submit(small)    # would fit, but must not overtake big
+        assert sched.try_admit() == []
+
+    def test_trash_page_never_allocated(self):
+        cfg, _, _ = _smoke_setup()
+        pcfg = PagedCacheConfig(page_size=8, n_pages=6, max_slots=2,
+                                max_blocks=3)
+        cache, _ = init_paged_cache(cfg, pcfg)
+        assert bool(jnp.all(cache["block_tables"] == TRASH_PAGE))
+        sched = ContinuousBatchingScheduler(pcfg)
+        sched.submit(Request(rid=0, prompt=np.zeros(8, np.int32),
+                             max_new_tokens=8))
+        (req,) = sched.try_admit()
+        assert TRASH_PAGE not in req.pages
+
+    def test_paging_gated_families(self):
+        from repro.serving.paged_cache import supports_paging
+        assert supports_paging(get_config("qwen2_7b", smoke=True))
+        assert not supports_paging(
+            get_config("h2o_danube_3_4b", smoke=True))   # sliding window
+        assert not supports_paging(
+            get_config("zamba2_2p7b", smoke=True))       # hybrid SSM
+        with pytest.raises(ValueError):
+            PagedServingEngine(
+                build_model(get_config("h2o_danube_3_4b", smoke=True)),
+                PagedCacheConfig())
+
+
+# ------------------------------------------------------ autotune problem
+class TestPagedAutotune:
+    def test_registered_and_tunable(self, tmp_path):
+        from repro.kernels import autotune
+        prob = autotune.flash_decode_paged_problem(2, 4, 2, 8, 16,
+                                                   "float32")
+        cands = autotune.enumerate_candidates("flash_decode_paged", prob)
+        assert {"page_size": 16} in [c for c, _ in cands]  # default
+        res = autotune.tune("flash_decode_paged", prob,
+                            cache_path=str(tmp_path / "c.json"), iters=1)
+        assert res.config["page_size"] >= 1
+        again = autotune.tune("flash_decode_paged", prob,
+                              cache_path=str(tmp_path / "c.json"),
+                              iters=1)
+        assert again.cached and again.config == res.config
+
+    def test_tune_task_derives_paged_problem(self):
+        from repro.tasks.tune import derive_problems
+        from repro.tasks.handle import DNNHandle
+        cfg = get_config("qwen2_7b", smoke=True)
+        model = build_model(cfg)
+        params = model.init(KEY)
+        handle = DNNHandle(kind="lm", name="m", params=params,
+                           model=model)
+        probs = derive_problems(handle, max_problems=16)
+        kernels = [p["kernel"] for p in probs]
+        assert "flash_decode_paged" in kernels
+        # windowed arch: ring-buffer cache is not paged -> no paged problem
+        wcfg = get_config("h2o_danube_3_4b", smoke=True)
+        wmodel = build_model(wcfg)
+        whandle = DNNHandle(kind="lm", name="w", params=wmodel.init(KEY),
+                            model=wmodel)
+        wkernels = [p["kernel"]
+                    for p in derive_problems(whandle, max_problems=16)]
+        assert "flash_decode_paged" not in wkernels
