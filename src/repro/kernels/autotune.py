@@ -54,6 +54,8 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_decode import flash_decode, pick_block_kv
 from repro.kernels.flash_decode_paged import (DEFAULT_PAGE_SIZE,
                                               flash_decode_paged)
+from repro.kernels.flash_prefill_ragged import BQ as BQ_PREFILL
+from repro.kernels.flash_prefill_ragged import flash_prefill_ragged
 from repro.kernels.quant_matmul import BK, BM, BN, quant_matmul
 
 TILE_SIZES = (32, 64, 128, 256)
@@ -373,6 +375,82 @@ def flash_decode_paged_problem(slots: int, h: int, kv_heads: int, d: int,
             "dtype": jnp.dtype(dtype).name}
 
 
+# ragged paged prefill -------------------------------------------------------
+def _fpr_vmem(problem: dict[str, Any], cfg: dict[str, int]) -> int:
+    d = problem["d"]
+    g = problem["h"] // problem["kv_heads"]
+    # the wrapper clamps block_q to the suffix length; the K/V tile is
+    # always one full page (fixed by the pool layout)
+    bq = min(cfg["block_q"], problem["s"]) * g
+    ps = problem["page_size"]
+    item = _itemsize(problem["dtype"])
+    blocks = (2 * bq * d + 2 * ps * d) * item       # q, out, k, v tiles
+    scratch = (2 * bq + bq * d) * 4                 # m, l, acc (f32)
+    temps = 2 * bq * ps * 4                         # s and p (f32)
+    return blocks + scratch + temps
+
+
+def _fpr_candidates(problem: dict[str, Any]
+                    ) -> list[tuple[dict[str, int], int]]:
+    # block_q tiles the suffix-query axis; the kv axis is walked page by
+    # page (the pool's page size — the prefix-match granule — is part of
+    # the problem, tuned through flash_decode_paged, not re-tuned here).
+    out, seen = [], set()
+    for bq in _axis(BQ_PREFILL, (8, 16)):
+        cfg = {"block_q": bq}
+        eff = min(bq, problem["s"])     # wrapper clamps: duplicates collapse
+        if eff in seen:
+            continue
+        seen.add(eff)
+        out.append((cfg, _fpr_vmem(problem, cfg)))
+    return out
+
+
+@functools.lru_cache(maxsize=16)
+def _fpr_inputs(problem_json: str):
+    problem = json.loads(problem_json)
+    dtype = jnp.dtype(problem["dtype"])
+    slots, s, h, d = (problem["slots"], problem["s"], problem["h"],
+                      problem["d"])
+    kvh, max_len, ps = (problem["kv_heads"], problem["max_len"],
+                        problem["page_size"])
+    blocks = -(-max_len // ps)
+    n_pages = slots * blocks + 1           # + the reserved scratch page
+    q = jax.random.normal(jax.random.PRNGKey(0),
+                          (slots, s, h, d)).astype(dtype)
+    kp = jax.random.normal(jax.random.PRNGKey(1),
+                           (n_pages, ps, kvh, d)).astype(dtype)
+    vp = jax.random.normal(jax.random.PRNGKey(2),
+                           (n_pages, ps, kvh, d)).astype(dtype)
+    bt = 1 + jnp.arange(slots * blocks, dtype=jnp.int32).reshape(
+        slots, blocks)
+    # worst case: every suffix sits at the end of a near-full prefix, so
+    # each query attends the whole history
+    off = jnp.full((slots,), max(0, max_len - s), jnp.int32)
+    lens = jnp.full((slots,), s, jnp.int32)
+    return q, kp, vp, bt, off, lens
+
+
+def _fpr_runner(problem: dict[str, Any], cfg: dict[str, int],
+                interpret: bool) -> Callable[[], Any]:
+    q, kp, vp, bt, off, lens = _fpr_inputs(
+        json.dumps(problem, sort_keys=True))
+    return lambda: flash_prefill_ragged(q, kp, vp, bt, off, lens,
+                                        interpret=interpret,
+                                        block_q=cfg["block_q"])
+
+
+def flash_prefill_ragged_problem(slots: int, s: int, h: int, kv_heads: int,
+                                 d: int, max_len: int, page_size: int,
+                                 dtype) -> dict[str, Any]:
+    """``s`` is the padded suffix bucket, ``max_len`` the logical slots
+    per request (block-table width x page size)."""
+    return {"slots": int(slots), "s": int(s), "h": int(h),
+            "kv_heads": int(kv_heads), "d": int(d),
+            "max_len": int(max_len), "page_size": int(page_size),
+            "dtype": jnp.dtype(dtype).name}
+
+
 # quant matmul ---------------------------------------------------------------
 def _qmm_vmem(problem: dict[str, Any], cfg: dict[str, int]) -> int:
     bm = min(cfg["block_m"], problem["m"])
@@ -489,6 +567,9 @@ KERNELS: dict[str, KernelEntry] = {
     "flash_decode_paged": KernelEntry(
         "flash_decode_paged", {"page_size": 16},
         _fpd_candidates, _fpd_runner),
+    "flash_prefill_ragged": KernelEntry(
+        "flash_prefill_ragged", {"block_q": BQ_PREFILL},
+        _fpr_candidates, _fpr_runner),
     "quant_matmul": KernelEntry(
         "quant_matmul", {"block_m": BM, "block_n": BN, "block_k": BK},
         _qmm_candidates, _qmm_runner),

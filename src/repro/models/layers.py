@@ -167,6 +167,37 @@ def paged_decode_attention_mask(kv_pos: jnp.ndarray,
     return (kv_pos <= seq_lens[:, None]) & (kv_pos < 2**30)
 
 
+def ragged_prefill_positions(offsets: jnp.ndarray, s: int) -> jnp.ndarray:
+    """(R, s) absolute position of each suffix query token.
+
+    Batched ragged admission prefill computes only the tokens *after*
+    each request's shared prefix; ``offsets[r]`` is the prefix length, so
+    suffix token ``i`` of request ``r`` sits at ``offsets[r] + i``.  The
+    single source of truth for suffix positions — lm_apply feeds it to
+    rope, and the mask helper below derives the causal frontier from it.
+    """
+    return offsets[:, None] + jnp.arange(s)[None]
+
+
+def ragged_prefill_attention_mask(offsets: jnp.ndarray, lens: jnp.ndarray,
+                                  s: int, n_slots: int) -> jnp.ndarray:
+    """(R, s, n_slots) bool: paged-cache slots each suffix query attends.
+
+    Logical slot ``j`` of a request holds position ``j`` (block tables
+    hide the physical scatter); query ``i`` at position ``offsets[r]+i``
+    attends every slot at or before it — the shared prefix written by an
+    earlier admission plus its own suffix, scattered in the same dispatch
+    before attention.  Rows at or past ``lens[r]`` (padding, idle slots)
+    attend nothing.  The flash_prefill_ragged kernel derives the same
+    predicate in-kernel from the scalar-prefetched offsets/lens
+    (tests/test_paged.py pins the two against each other).
+    """
+    q_pos = ragged_prefill_positions(offsets, s)
+    valid_q = jnp.arange(s)[None] < lens[:, None]
+    slot = jnp.arange(n_slots)
+    return (slot[None, None, :] <= q_pos[:, :, None]) & valid_q[:, :, None]
+
+
 def _masked_decode_attention(q, k, v, mask, n_heads: int) -> jnp.ndarray:
     """jnp one-token decode attention oracle.
 
@@ -199,6 +230,10 @@ def mea_attention(q, k, v, q_positions, kv_positions, *,
     q: (B,Sq,H,hd); k/v: (B,Skv,H,hd) (kv already head-expanded).
     Scans over kv chunks carrying (m, l, acc) — the jnp oracle for the
     Pallas flash kernel.
+
+    ``q_positions`` is (Sq,) batch-shared, or (B, Sq) per-request for the
+    ragged paged-prefill oracle (each admission's suffix starts at its
+    own shared-prefix offset).
     """
     b, sq, h, hd = q.shape
     hd_v = v.shape[-1]
@@ -221,18 +256,22 @@ def mea_attention(q, k, v, q_positions, kv_positions, *,
     op_dt = jnp.bfloat16 if bf16_operands else jnp.float32
     qf = (q.astype(jnp.float32) * scale).astype(op_dt)
 
+    # (Bm, Sq) query positions: Bm = B for per-request ragged rows, 1 for
+    # the batch-shared case (broadcasts below exactly as mask[None] did)
+    qp = q_positions if q_positions.ndim == 2 else q_positions[None]
+
     def body(carry, inp):
         m, l, acc = carry
         kj, vj, pj = inp
         s = jnp.einsum("bqhd,bkhd->bhqk", qf, kj.astype(op_dt),
                        preferred_element_type=jnp.float32)
-        mask = jnp.ones((sq, chunk), bool)
+        mask = jnp.ones((qp.shape[0], sq, chunk), bool)
         if causal:
-            mask &= q_positions[:, None] >= pj[None, :]
+            mask &= qp[:, :, None] >= pj[None, None, :]
         if window:
-            mask &= (q_positions[:, None] - pj[None, :]) < window
-        mask &= pj[None, :] < 2**30
-        s = jnp.where(mask[None, None], s, NEG_INF)
+            mask &= (qp[:, :, None] - pj[None, None, :]) < window
+        mask &= pj[None, None, :] < 2**30
+        s = jnp.where(mask[:, None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -287,7 +326,14 @@ def attention(ctx: Ctx, cfg: ArchConfig, p, x, positions,
 
     new_cache = cache
     if cache is not None and ctx.decode and "k_pages" in cache:
-        out, new_cache = _paged_attention_decode(ctx, cfg, q, k, v, cache)
+        if "prefill_lens" in cache:
+            # batched ragged admission prefill: s suffix tokens per
+            # request, offsets/lens injected by the serving engine
+            out, new_cache = _paged_attention_prefill(ctx, cfg, q, k, v,
+                                                      cache)
+        else:
+            out, new_cache = _paged_attention_decode(ctx, cfg, q, k, v,
+                                                     cache)
     elif cache is not None and ctx.decode:
         cache_len = cache["k"].shape[1]
         pos = cache["pos"]  # scalar int32: absolute position of x[:, 0]
@@ -398,6 +444,76 @@ def _paged_attention_decode(ctx: Ctx, cfg: ArchConfig, q, k, v, cache):
         kf = kp[bt].reshape(r, n_slots, kvh, hd)
         vf = vp[bt].reshape(r, n_slots, kvh, hd)
         out = _masked_decode_attention(q, kf, vf, mask, h)
+    return out, new_cache
+
+
+def _paged_attention_prefill(ctx: Ctx, cfg: ArchConfig, q, k, v, cache):
+    """Batched ragged admission prefill over a paged block-table cache.
+
+    q/k/v: (R, S, ·, hd) — each row holds one admission's *suffix* (the
+    prompt tokens after its shared prefix), already roped at the absolute
+    positions ``seq_lens[r] + i`` (``seq_lens`` carries the per-request
+    prefix offsets during an admission dispatch; ``prefill_lens`` the
+    valid suffix lengths, 0 for idle slots).  The suffix K/V is scattered
+    into each request's own pages first — padding and idle rows land on
+    the engine's reserved scratch page (physical page 0) — then every
+    suffix query attends causally over the request's full logical prefix:
+    pages mapped from the prefix cache plus the suffix written by this
+    same dispatch (admissions sharing a boundary therefore read each
+    other's freshly computed prefix K/V in-graph, which is what makes a
+    shared-prefix burst prefill-once).
+
+    Oracle path: gather pages through the block table and run the same
+    chunked mea_attention the contiguous prefill uses (per-request 2D
+    query positions) — serial batch-1 prefill and this batched path
+    reduce with identical math.  Kernel path (``ctx.use_kernels``):
+    kernels/flash_prefill_ragged.py, block table + offsets/lens as
+    scalar prefetch, mask semantics per
+    :func:`ragged_prefill_attention_mask`.
+    """
+    assert not cfg.sliding_window, \
+        "paged prefill supports linear caches only"
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    bt, off = cache["block_tables"], cache["seq_lens"]
+    lens = cache["prefill_lens"]
+    _, ps, kvh, hd = kp.shape
+    r, s, h, _ = q.shape
+    blocks = bt.shape[1]
+    n_slots = blocks * ps
+    # scatter the suffix K/V at positions offset..offset+len-1; invalid
+    # (padded / idle-slot) writes are routed to the scratch page 0
+    pos = ragged_prefill_positions(off, s)
+    valid = jnp.arange(s)[None] < lens[:, None]
+    pos_c = jnp.minimum(pos, n_slots - 1)
+    rows = jnp.arange(r)[:, None]
+    pidx = jnp.where(valid, bt[rows, pos_c // ps], 0)
+    slot = pos_c % ps
+    kp = kp.at[pidx, slot].set(k.astype(kp.dtype))
+    vp = vp.at[pidx, slot].set(v.astype(vp.dtype))
+    new_cache = dict(cache, k_pages=kp, v_pages=vp)
+    seq_sharded = (ctx.mesh is not None
+                   and "model" in ctx.mesh.axis_names
+                   and _axis_size(ctx.mesh, "model") > 1)
+    if ctx.use_kernels and not seq_sharded:
+        from repro.kernels import autotune
+        from repro.kernels.flash_prefill_ragged import flash_prefill_ragged
+        tile = autotune.cached_config(
+            "flash_prefill_ragged",
+            autotune.flash_prefill_ragged_problem(r, s, h, kvh, hd,
+                                                  n_slots, ps, q.dtype),
+            relax=("slots", "s", "max_len"))
+        out = flash_prefill_ragged(q, kp, vp, bt, off, lens,
+                                   interpret=ctx.interpret,
+                                   block_q=tile["block_q"]).astype(q.dtype)
+    else:
+        # jnp oracle: gather each request's pages into contiguous K/V and
+        # run the standard chunked-mea prefill with per-request positions
+        kf = kp[bt].reshape(r, n_slots, kvh, hd)
+        vf = vp[bt].reshape(r, n_slots, kvh, hd)
+        out = mea_attention(q, _expand_kv(kf, h), _expand_kv(vf, h),
+                            pos, jnp.arange(n_slots),
+                            causal=True, chunk=cfg.attn_chunk,
+                            bf16_operands=cfg.mea_bf16)
     return out, new_cache
 
 

@@ -206,8 +206,11 @@ def lm_apply(ctx: Ctx, cfg: ArchConfig, params, tokens, positions=None,
                 # is detected by "k_pages" in layers.attention): ragged
                 # batch, per-request positions.  The serving engine owns
                 # the seq_lens increment (it knows which slots are
-                # active); lm_apply only reads them.
-                positions = cache["seq_lens"][:, None] + jnp.arange(s)[None]
+                # active); lm_apply only reads them.  During a batched
+                # admission prefill seq_lens carries the shared-prefix
+                # offsets, so the same helper positions both paths.
+                positions = L.ragged_prefill_positions(cache["seq_lens"],
+                                                       s)
             else:
                 pos0 = _cache_pos(cfg, cache)
                 positions = pos0 + jnp.arange(s)
@@ -226,9 +229,15 @@ def lm_apply(ctx: Ctx, cfg: ArchConfig, params, tokens, positions=None,
             lp, lc = xs
             if paged:
                 # block tables / seq_lens are batch state shared by every
-                # layer — injected here instead of stacked per layer
+                # layer — injected here instead of stacked per layer.
+                # prefill_lens (per-request valid suffix lengths) rides
+                # along only during a batched ragged admission prefill
+                # dispatch; its presence is what routes layers.attention
+                # to the ragged-prefill branch.
                 lc = dict(lc, block_tables=cache["block_tables"],
                           seq_lens=cache["seq_lens"])
+                if "prefill_lens" in cache:
+                    lc["prefill_lens"] = cache["prefill_lens"]
             y, nc = block_fn(ctx, cfg, lp, xcarry, positions, lc)
             if paged:
                 nc = {"k_pages": nc["k_pages"], "v_pages": nc["v_pages"]}

@@ -1,19 +1,27 @@
 """Serving subsystem: paged KV-cache pool + continuous-batching engine.
 
-- paged_cache: fixed-size page pool, host-side free-list allocator,
-  per-request block tables (vLLM-style paging, TPU-shaped layout).
-- scheduler: FIFO request queue with admission-on-free-pages and
-  page reclamation when requests complete.
-- engine: drives prefill-into-pages + fixed-length decode scan segments,
-  swapping finished requests for queued ones at segment boundaries.
+- paged_cache: fixed-size page pool, host-side refcounted free-list
+  allocator, per-request block tables (vLLM-style paging, TPU-shaped
+  layout) and the prefix-sharing trie (PrefixCache) that maps identical
+  page-aligned prompt prefixes onto the same physical pages with
+  copy-on-write tail forks.
+- scheduler: FIFO request queue with admission-on-free-pages, prefix-hit
+  page mapping, and page reclamation when requests complete.
+- engine: drives batched ragged admission prefill (one dispatch per
+  segment boundary covering every admission's post-prefix suffix) +
+  fixed-length decode scan segments, swapping finished requests for
+  queued ones at segment boundaries.
 """
 
 from repro.serving.paged_cache import (PageAllocator, PagedCacheConfig,
-                                       TRASH_PAGE, init_paged_cache)
+                                       PrefixCache, PrefixMatch,
+                                       TRASH_PAGE, init_paged_cache,
+                                       preferred_page_size)
 from repro.serving.scheduler import ContinuousBatchingScheduler, Request
 from repro.serving.engine import PagedServingEngine
 
 __all__ = [
-    "PageAllocator", "PagedCacheConfig", "TRASH_PAGE", "init_paged_cache",
+    "PageAllocator", "PagedCacheConfig", "PrefixCache", "PrefixMatch",
+    "TRASH_PAGE", "init_paged_cache", "preferred_page_size",
     "ContinuousBatchingScheduler", "Request", "PagedServingEngine",
 ]

@@ -1,27 +1,37 @@
 """Continuous-batching serving engine over the paged KV cache.
 
 One engine owns: a paged cache pool (serving/paged_cache.py), a scheduler
-(serving/scheduler.py), and three jitted entry points —
+(serving/scheduler.py), and its jitted entry points —
 
-- ``prefill``: batch-1 prefill of one admitted request into a contiguous
-  scratch cache sized to a whole number of pages, returning the first
-  greedy token and the prompt K/V reshaped into page-sized chunks;
-- ``write_pages``: scatter of those chunks into the request's allocated
-  physical pages (all layers at once, donated pool);
+- ``admit_batch`` (default admission path): *all* requests admitted at a
+  segment boundary prefill in one dispatch.  Copy-on-write tail pages are
+  forked first, then every admission's *suffix* tokens (the prompt after
+  its shared prefix) run through the model with the paged cache attached:
+  per-layer suffix K/V scatters into the request's own pages and ragged
+  causal attention covers shared prefix + suffix
+  (models/layers.py::_paged_attention_prefill /
+  kernels/flash_prefill_ragged.py).  Each request's first greedy token is
+  picked from its own last valid suffix position in-graph.  Admissions
+  that share a prefix compute it once — or zero times, when the prefix
+  cache already holds it from an earlier admission.
+- ``prefill`` + ``write_pages`` (the PR-3 serial path, kept as the bench
+  baseline and for A/B tests): batch-1 prefill of one request into a
+  contiguous scratch cache, then a scatter of page-sized chunks into its
+  allocated pages.  Serial mode disables prefix sharing — it is the
+  measured "before" configuration.
 - ``segment``: ``segment_len`` decode steps fused into one
   ``jax.lax.scan`` dispatch over the whole slot batch, with greedy
   sampling, per-slot active masks, and seq_lens advancement carried
   in-graph.
 
 The host loop runs at segment boundaries only: pull back the tiny control
-state (tokens, active, n_gen, seq_lens), retire finished requests (pages
-to the free list, block-table row parked on the scratch page), admit
+state (tokens, active, n_gen, seq_lens), retire finished requests (page
+references dropped, block-table row parked on the scratch page), admit
 queued ones into the freed slots/pages, and dispatch the next segment.
-KV state never moves on admission or eviction — only block-table rows
-change — which is what lets one slot batch serve an arrival process whose
-requests start and finish at different times (continuous batching) while
-paying the contiguous path's per-step cost for the batch, not per
-request.
+KV state never moves on admission or eviction — only block-table rows and
+page refcounts change — which is what lets one slot batch serve an
+arrival process whose requests start and finish at different times while
+sharing both physical pages and admission-prefill dispatches.
 """
 
 from __future__ import annotations
@@ -39,16 +49,25 @@ from repro.serving.scheduler import ContinuousBatchingScheduler, Request
 
 class PagedServingEngine:
     def __init__(self, model, pcfg: PagedCacheConfig,
-                 cache_dtype=jnp.bfloat16):
+                 cache_dtype=jnp.bfloat16, prefill_mode: str = "batched"):
         if not supports_paging(model.cfg):
             raise ValueError(f"{model.cfg.name} does not support the "
                              f"paged decode path")
+        if prefill_mode not in ("batched", "serial"):
+            raise ValueError(f"prefill_mode={prefill_mode!r}")
         self.model = model
         self.pcfg = pcfg
         self.cache_dtype = cache_dtype
+        self.prefill_mode = prefill_mode
+        # prefix sharing needs the ragged suffix prefill: the serial
+        # batch-1 path always computes (and would re-store) whole prompts
+        self.sharing = pcfg.enable_prefix_sharing and \
+            prefill_mode == "batched"
         self._prefill = jax.jit(self._prefill_impl)
         self._write_pages = jax.jit(self._write_pages_impl,
                                     donate_argnums=(0,))
+        self._admit_batch = jax.jit(self._admit_batch_impl,
+                                    donate_argnums=(1,))
         self._segment = jax.jit(self._segment_impl, donate_argnums=(1,))
 
     # ------------------------------------------------------------ jitted
@@ -69,6 +88,34 @@ class PagedServingEngine:
         """Scatter page chunks (L, n, ps, KV, hd) into physical ``rows``."""
         return {"k_pages": blocks["k_pages"].at[:, rows].set(pk),
                 "v_pages": blocks["v_pages"].at[:, rows].set(pv)}
+
+    def _admit_batch_impl(self, params, blocks, tokens, bt, offsets, lens,
+                          cow_src, cow_dst):
+        """One dispatch for a whole admission boundary.
+
+        tokens: (R, S) suffix tokens padded to the bucket; offsets/lens:
+        (R,) shared-prefix offset and valid suffix length per slot (0/0
+        for slots not admitted this boundary); cow_src/cow_dst: (R,)
+        physical pages to fork before the suffix scatter (TRASH_PAGE
+        pairs for slots without a copy-on-write tail).  Returns each
+        slot's first greedy token (R, 1) and the updated page pools.
+        """
+        kp, vp = blocks["k_pages"], blocks["v_pages"]
+        # copy-on-write first: a shared tail page's prompt slots must be
+        # resident in the request's own copy before this dispatch's
+        # scatter appends the remaining suffix to that copy.  No-CoW
+        # slots copy scratch->scratch, which the trash page absorbs.
+        kp = kp.at[:, cow_dst].set(kp[:, cow_src])
+        vp = vp.at[:, cow_dst].set(vp[:, cow_src])
+        cache = {"blocks": {"k_pages": kp, "v_pages": vp},
+                 "block_tables": bt, "seq_lens": offsets,
+                 "prefill_lens": lens}
+        logits, cache = self.model.decode_step(params, cache, tokens)
+        last = jnp.maximum(lens - 1, 0)
+        sel = jnp.take_along_axis(
+            logits, last[:, None, None], axis=1)[:, 0]       # (R, V)
+        tok = jnp.argmax(sel, axis=-1).astype(jnp.int32)
+        return tok[:, None], cache["blocks"]
 
     def _segment_impl(self, params, cache, tok, active, n_gen, max_new):
         """``segment_len`` decode steps as one fused scan dispatch.
@@ -95,13 +142,122 @@ class PagedServingEngine:
         return cache, tok, active, n_gen, toks, emits
 
     # --------------------------------------------------------- host loop
+    def _admit_serial(self, cache, bt, req, params):
+        """PR-3 admission: batch-1 prefill + page scatter (no sharing)."""
+        pcfg = self.pcfg
+        tok1, pk, pv = self._prefill(params,
+                                     jnp.asarray(req.prompt[None]))
+        n_pp = pcfg.pages_for(req.prompt_len)
+        rows = jnp.asarray(np.asarray(req.pages[:n_pp], np.int32))
+        cache = dict(cache, blocks=self._write_pages(
+            cache["blocks"], pk, pv, rows))
+        bt[req.slot] = TRASH_PAGE
+        bt[req.slot, :len(req.pages)] = req.pages
+        return cache, int(np.asarray(tok1)[0, 0])
+
+    def _admit_batched(self, cache, bt, admitted, params):
+        """Batched ragged admission: one dispatch per suffix bucket.
+
+        Rows of a dispatch are the admissions themselves (compact — idle
+        slots cost nothing), padded to a power-of-two row count and to
+        the bucketized max suffix length, so the compiled-shape space
+        stays small while a burst whose prefix already hit the cache
+        pays only for its short suffixes.
+
+        Ordering invariant: a sharer must not attend pages its
+        same-boundary prefix owner has not written yet.  Within one
+        dispatch the per-layer scatter-then-attend ordering covers this
+        in-graph; across dispatches, buckets run longest-first, which is
+        owner-first whenever the owner's suffix is at least as long as
+        the sharer's (the common burst shape).  The one case that
+        violates it — a sharer whose *own* suffix outgrows its owner's
+        whole suffix (short cached system prompt, long user message) —
+        is split into a later *wave* by ``_admission_waves``, so its
+        dispatch runs after the owner's.
+
+        Returns {slot: first greedy token}.
+        """
+        pcfg = self.pcfg
+        bucket = max(1, pcfg.prefill_bucket)
+        tok_by_slot: dict[int, int] = {}
+        n_dispatches = 0
+        for req in admitted:
+            bt[req.slot] = TRASH_PAGE
+            bt[req.slot, :len(req.pages)] = req.pages
+        for wave in self._admission_waves(admitted, bucket):
+            groups: dict[int, list] = {}
+            for req, s_pad in wave:
+                groups.setdefault(s_pad, []).append(req)
+            for s_pad, reqs in sorted(groups.items(), reverse=True):
+                toks, cache = self._dispatch_admissions(cache, bt, reqs,
+                                                        s_pad, params)
+                tok_by_slot.update(toks)
+                n_dispatches += 1
+        return cache, tok_by_slot, n_dispatches
+
+    def _admission_waves(self, admitted, bucket):
+        """Partition a boundary's admissions (FIFO order) into waves such
+        that every same-boundary prefix dependency points to an
+        equal-or-larger suffix bucket within the wave — which descending
+        bucket order then dispatches first.  A sharer with a *larger*
+        bucket than a current-wave owner closes the wave."""
+        waves: list[list] = []
+        cur: list = []
+        cur_writers: dict[int, int] = {}   # page -> writer's bucket
+        for req in admitted:
+            sfx = req.prompt_len - req.shared_tokens
+            s_pad = -(-sfx // bucket) * bucket
+            deps = [cur_writers[p] for p in req.pages[:req.shared_pages]
+                    if p in cur_writers]
+            if any(b < s_pad for b in deps):
+                waves.append(cur)
+                cur, cur_writers = [], {}
+            cur.append((req, s_pad))
+            # pages this request's dispatch writes: its fresh suffix +
+            # decode pages (shared prefix pages belong to their writer)
+            for p in req.pages[req.shared_pages:]:
+                cur_writers[p] = s_pad
+        if cur:
+            waves.append(cur)
+        return waves
+
+    def _dispatch_admissions(self, cache, bt, reqs, s_pad, params):
+        """One compact jitted dispatch for ``reqs`` at suffix pad
+        ``s_pad``; returns ({slot: first token}, cache)."""
+        pcfg = self.pcfg
+        a = 1
+        while a < len(reqs):
+            a *= 2
+        tokens = np.zeros((a, s_pad), np.int32)
+        offs = np.zeros((a,), np.int32)
+        lens = np.zeros((a,), np.int32)
+        gbt = np.full((a, pcfg.max_blocks), TRASH_PAGE, np.int32)
+        cow_src = np.full((a,), TRASH_PAGE, np.int32)
+        cow_dst = np.full((a,), TRASH_PAGE, np.int32)
+        for i, req in enumerate(reqs):
+            suffix = req.prompt[req.shared_tokens:]
+            tokens[i, :len(suffix)] = suffix
+            offs[i] = req.shared_tokens
+            lens[i] = len(suffix)
+            gbt[i] = bt[req.slot]
+            if req.cow_src is not None:
+                cow_src[i] = req.cow_src
+                cow_dst[i] = req.cow_dst
+        tok1, blocks = self._admit_batch(
+            params, cache["blocks"], jnp.asarray(tokens),
+            jnp.asarray(gbt), jnp.asarray(offs), jnp.asarray(lens),
+            jnp.asarray(cow_src), jnp.asarray(cow_dst))
+        tok1 = np.asarray(tok1)
+        return ({req.slot: int(tok1[i, 0]) for i, req in enumerate(reqs)},
+                dict(cache, blocks=blocks))
+
     def run(self, requests: list[Request], params) -> dict:
         """Serve ``requests`` (honoring their ``arrival`` offsets) to
         completion.  Mutates each request in place (tokens, t_admitted,
         t_done, all relative to engine start) and returns run counters.
         """
         pcfg = self.pcfg
-        sched = ContinuousBatchingScheduler(pcfg)
+        sched = ContinuousBatchingScheduler(pcfg, sharing=self.sharing)
         cache, _ = init_paged_cache(self.model.cfg, pcfg, self.cache_dtype)
         r, m = pcfg.max_slots, pcfg.max_blocks
         bt = np.full((r, m), TRASH_PAGE, np.int32)
@@ -114,6 +270,7 @@ class PagedServingEngine:
         queue = sorted(requests, key=lambda q: q.arrival)
         nxt_arrival = 0
         n_segments = 0
+        n_prefill_dispatches = 0
         prefill_s = 0.0
         decode_s = 0.0
         t0 = timer()
@@ -128,30 +285,38 @@ class PagedServingEngine:
                     active[slot] = False
                     n_gen[slot] = 0
 
+        def start_request(req, first_tok: int, now: float) -> None:
+            slot = req.slot
+            seq_lens[slot] = req.prompt_len
+            tok[slot] = first_tok
+            n_gen[slot] = 1
+            max_new[slot] = req.max_new_tokens
+            active[slot] = req.max_new_tokens > 1
+            req.tokens = [int(first_tok)]
+            req.t_admitted = now
+
         while nxt_arrival < len(queue) or sched.has_work:
             now = timer() - t0
             while (nxt_arrival < len(queue)
                    and queue[nxt_arrival].arrival <= now):
                 sched.submit(queue[nxt_arrival])
                 nxt_arrival += 1
-            for req in sched.try_admit():
+            admitted = sched.try_admit()
+            if admitted:
                 t_pf = timer()
-                tok1, pk, pv = self._prefill(
-                    params, jnp.asarray(req.prompt[None]))
-                n_pp = pcfg.pages_for(req.prompt_len)
-                rows = jnp.asarray(np.asarray(req.pages[:n_pp], np.int32))
-                cache = dict(cache, blocks=self._write_pages(
-                    cache["blocks"], pk, pv, rows))
-                slot = req.slot
-                bt[slot] = TRASH_PAGE
-                bt[slot, :len(req.pages)] = req.pages
-                seq_lens[slot] = req.prompt_len
-                tok[slot] = np.asarray(tok1)[0]
-                n_gen[slot] = 1
-                max_new[slot] = req.max_new_tokens
-                active[slot] = req.max_new_tokens > 1
-                req.tokens = [int(tok1[0, 0])]
-                req.t_admitted = timer() - t0
+                if self.prefill_mode == "batched":
+                    cache, tok1, n_disp = self._admit_batched(
+                        cache, bt, admitted, params)
+                    for req in admitted:
+                        start_request(req, tok1[req.slot], timer() - t0)
+                    n_prefill_dispatches += n_disp
+                else:
+                    for req in admitted:
+                        cache, first = self._admit_serial(cache, bt, req,
+                                                          params)
+                        start_request(req, first, timer() - t0)
+                        n_prefill_dispatches += 1
+                sched.finish_boundary(admitted)
                 prefill_s += timer() - t_pf
             retire_finished(timer() - t0)
             if not sched.running:
@@ -186,21 +351,26 @@ class PagedServingEngine:
         return {"n_segments": n_segments,
                 "n_admitted": sched.n_admitted,
                 "n_finished": len(sched.finished),
-                "prefill_s": prefill_s,    # summed batch-1 admissions
+                "n_prefill_dispatches": n_prefill_dispatches,
+                "prefill_s": prefill_s,    # summed admission dispatches
                 "decode_s": decode_s,      # summed segment dispatches
-                "wall_s": timer() - t0}
+                "wall_s": timer() - t0,
+                **sched.stats()}
 
 
 def warmup(engine: PagedServingEngine, params, prompt_len: int,
-           max_new_tokens: int) -> None:
+           max_new_tokens: int, n_requests: int = 1) -> None:
     """Compile prefill + segment outside any timed region.
 
-    One call warms exactly one prompt shape; jitted prefill/page-write
-    specialize on the prompt's page count, so call once per distinct
-    ``pages_for(prompt_len)`` you intend to serve (the segment fns are
-    shape-stable across calls).
+    One call warms exactly one admission shape: the serial path
+    specializes on the prompt's page count, the batched path on the
+    padded suffix bucket.  Call once per distinct shape you intend to
+    serve (the segment fns are shape-stable across calls); for bursty
+    shared-prefix traffic the simplest warmup is running the actual
+    workload once untimed, which visits every bucket it will use.
     """
-    req = Request(rid="warmup",
-                  prompt=np.zeros((prompt_len,), np.int32),
-                  max_new_tokens=max_new_tokens)
-    engine.run([req], params)
+    reqs = [Request(rid=f"warmup{i}",
+                    prompt=np.zeros((prompt_len,), np.int32),
+                    max_new_tokens=max_new_tokens)
+            for i in range(n_requests)]
+    engine.run(reqs, params)

@@ -30,8 +30,10 @@ at pool-construction time — the layout is fixed once allocated.
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 
@@ -46,10 +48,40 @@ class PagedCacheConfig:
     max_slots: int = 8       # in-flight batch width R
     max_blocks: int = 8      # block-table width M (logical pages per request)
     segment_len: int = 8     # decode steps between scheduler syncs
+    # Prefix sharing: admissions map already-resident pages holding an
+    # identical page-aligned prompt prefix instead of recomputing and
+    # re-storing them (refcounted; decode writes into a shared tail page
+    # fork a private copy first).  The match granule is
+    # ``prefix_chunk_pages * page_size`` tokens — page_size flows from the
+    # autotuner (preferred_page_size), so the granularity is a tuned
+    # quantity, not a constant.
+    enable_prefix_sharing: bool = True
+    prefix_chunk_pages: int = 1   # trie-edge granularity, in pages
+    # Batched admission prefill pads each admission's suffix to a multiple
+    # of this bucket so one boundary's admissions share a single ragged
+    # dispatch with a bounded number of compiled shapes.
+    prefill_bucket: int = 8
 
     def pages_for(self, n_tokens: int) -> int:
         """Pages needed to hold ``n_tokens`` cache slots."""
         return -(-int(n_tokens) // self.page_size)
+
+    @property
+    def prefix_match_tokens(self) -> int:
+        """Tokens per prefix-trie edge (the sharing granule)."""
+        return self.prefix_chunk_pages * self.page_size
+
+    def to_dict(self) -> dict[str, Any]:
+        """JSON-safe dict (checkpoint ``extra`` payloads)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "PagedCacheConfig":
+        """Inverse of :meth:`to_dict`.  Unknown keys are dropped and
+        missing ones take their defaults, so configs persisted before a
+        knob existed (or after one is retired) stay loadable."""
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
 
     @property
     def capacity_tokens(self) -> int:
@@ -78,11 +110,18 @@ class PagedCacheConfig:
 
 
 class PageAllocator:
-    """Host-side free-list allocator over the physical page pool.
+    """Host-side refcounted free-list allocator over the physical page pool.
 
     Page ids are handed out lowest-first and returned pages are reused
     before fresh ones — the pool working set stays compact, and tests can
     assert literal page-id reuse after a request completes.
+
+    Prefix sharing maps one physical page into several requests' block
+    tables; each mapping holds a reference (:meth:`share`), and a page
+    only returns to the free list when its last reference is released.
+    Every alloc bumps the page's *generation* — the prefix trie records
+    (page, generation) so an entry for a page that was freed and
+    re-issued to unrelated content can never validate.
     """
 
     def __init__(self, n_pages: int):
@@ -90,29 +129,230 @@ class PageAllocator:
             raise ValueError("need at least one allocatable page "
                              "beyond the reserved scratch page")
         self._free = list(range(n_pages - 1, 0, -1))  # pop() -> ascending
-        self._held: set[int] = set()
+        self._refs: dict[int, int] = {}               # page -> refcount
+        self._gen = [0] * n_pages                     # bumped per alloc
+        self.pages_allocated_total = 0                # fresh allocs (stats)
+        self.pages_shared_total = 0                   # share() refs (stats)
 
     @property
     def n_free(self) -> int:
         return len(self._free)
 
+    @property
+    def n_held(self) -> int:
+        """Distinct physical pages currently referenced."""
+        return len(self._refs)
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
+    def generation(self, page: int) -> int:
+        return self._gen[page]
+
+    def is_shared(self, page: int) -> bool:
+        return self._refs.get(page, 0) > 1
+
     def alloc(self, n: int) -> list[int] | None:
-        """``n`` pages, or None (allocation is all-or-nothing)."""
+        """``n`` fresh pages at refcount 1, or None (all-or-nothing)."""
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._held.update(pages)
+        for p in pages:
+            self._refs[p] = 1
+            self._gen[p] += 1
+        self.pages_allocated_total += n
         return pages
 
-    def release(self, pages: list[int]) -> None:
+    def share(self, pages: list[int]) -> None:
+        """Add one reference per page (mapping live pages into another
+        request's block table).  Sharing a free page is a bug."""
         for p in pages:
-            if p not in self._held:
+            if self._refs.get(p, 0) < 1:
+                raise ValueError(f"cannot share free/foreign page {p}")
+        for p in pages:
+            self._refs[p] += 1
+        self.pages_shared_total += len(pages)
+
+    def release(self, pages: list[int]) -> list[int]:
+        """Drop one reference per page; pages hitting refcount 0 return
+        to the free list (returned for tests/telemetry)."""
+        freed: list[int] = []
+        for p in pages:
+            if self._refs.get(p, 0) < 1:
                 raise ValueError(f"double free or foreign page {p}")
-            self._held.discard(p)
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                freed.append(p)
         # freed pages go to the top of the stack: first to be reused
-        self._free.extend(sorted(pages, reverse=True))
+        self._free.extend(sorted(freed, reverse=True))
+        return freed
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixMatch:
+    """Result of a prefix-cache lookup against one prompt."""
+    pages: tuple[int, ...] = ()     # full-chunk physical pages, in order
+    n_tokens: int = 0               # tokens covered (full chunks + tail)
+    tail_src: int | None = None     # page to copy-on-write the tail from
+    tail_tokens: int = 0            # tokens matched inside the tail page
+
+
+class _TrieNode:
+    __slots__ = ("children", "tails")
+
+    def __init__(self):
+        # token-chunk -> (pages, gens, ready, child)
+        self.children: dict[tuple, list] = {}
+        # partial-page tail tokens -> [page, gen, ready]
+        self.tails: dict[tuple, list] = {}
+
+
+class PrefixCache:
+    """Prefix trie over token-id page chunks -> resident physical pages.
+
+    Each edge covers ``chunk_pages`` full pages of prompt tokens starting
+    at a fixed absolute position (trie depth x chunk tokens), so a match
+    guarantees the stored pages hold K/V for *these tokens at these
+    positions* — sharing is a pure block-table aliasing, no recompute.
+
+    Entries carry the allocator generation captured at insert; lookups
+    re-validate ``refcount > 0 and generation unchanged`` and prune stale
+    entries lazily, so completion never has to notify the trie.
+
+    Tail entries index a request's final *partially filled* prompt page.
+    That page is mutable (its owner decodes into it), so a tail match is
+    satisfied by copy-on-write: the matching prompt slots are copied into
+    a page the new request owns before its first write.  Tail entries
+    only become matchable once :meth:`mark_ready` confirms their K/V has
+    materialized on device — a same-boundary admission must not CoW-copy
+    a page whose prefill is still in flight.  Full-chunk entries are
+    matchable immediately: same-boundary sharers read them *after* the
+    batched prefill's in-graph scatter, inside the same dispatch.
+    """
+
+    def __init__(self, allocator: PageAllocator, page_size: int,
+                 chunk_pages: int = 1):
+        self.allocator = allocator
+        self.page_size = int(page_size)
+        self.chunk_pages = int(chunk_pages)
+        self.chunk_tokens = self.page_size * self.chunk_pages
+        self.root = _TrieNode()
+        self._pending: list[list] = []   # entries awaiting mark_ready
+        self.lookups = 0
+        self.hits = 0                    # lookups matching >= 1 token
+        self.tokens_matched = 0
+
+    def _entry_valid(self, pages, gens) -> bool:
+        alloc = self.allocator
+        return all(alloc.refcount(p) > 0 and alloc.generation(p) == g
+                   for p, g in zip(pages, gens))
+
+    def lookup(self, tokens: np.ndarray) -> PrefixMatch:
+        """Longest resident prefix of ``tokens``, full chunks first, then
+        one partial-tail page.  At least one trailing token is always
+        left unmatched — the admission prefill must still produce the
+        request's first-token logits.
+
+        Pure read apart from lazy pruning: the hit/token counters only
+        move when :meth:`record` confirms the match was consumed by an
+        admission (a blocked head-of-line request is looked up again at
+        every boundary and must not inflate the stats)."""
+        toks = [int(t) for t in tokens]
+        cap = len(toks) - 1              # always >= 1 suffix token
+        node = self.root
+        pages: list[int] = []
+        pos = 0
+        ct = self.chunk_tokens
+        while pos + ct <= cap:
+            key = tuple(toks[pos:pos + ct])
+            entry = node.children.get(key)
+            if entry is None:
+                break
+            e_pages, e_gens, _ready, child = entry
+            if not self._entry_valid(e_pages, e_gens):
+                del node.children[key]   # lazy prune of stale entries
+                break
+            pages.extend(e_pages)
+            pos += ct
+            node = child
+        tail_src, tail_tokens = None, 0
+        budget = cap - pos
+        if 0 < budget:
+            for key, entry in list(node.tails.items()):
+                page, gen, ready = entry
+                if not self._entry_valid((page,), (gen,)):
+                    del node.tails[key]
+                    continue
+                if not ready:
+                    continue
+                m = 0
+                for a, b in zip(key, toks[pos:pos + budget]):
+                    if a != b:
+                        break
+                    m += 1
+                if m > tail_tokens:
+                    tail_src, tail_tokens = page, m
+        return PrefixMatch(pages=tuple(pages), n_tokens=pos + tail_tokens,
+                           tail_src=tail_src, tail_tokens=tail_tokens)
+
+    def record(self, match: PrefixMatch) -> None:
+        """Count a lookup whose result an admission actually consumed."""
+        self.lookups += 1
+        if match.n_tokens:
+            self.hits += 1
+            self.tokens_matched += match.n_tokens
+
+    def insert(self, tokens: np.ndarray, prompt_len: int,
+               pages: list[int]) -> None:
+        """Register an admitted request's prompt pages.
+
+        Full chunks whose last token lies within the prompt are immutable
+        (decode writes start at ``prompt_len``, which lives in a later
+        page) and are indexed directly; a trailing partial page becomes a
+        tail entry.  Both are queued not-ready until :meth:`mark_ready`.
+        """
+        toks = [int(t) for t in tokens[:prompt_len]]
+        alloc = self.allocator
+        node = self.root
+        ct = self.chunk_tokens
+        pos = 0
+        while pos + ct <= prompt_len:
+            key = tuple(toks[pos:pos + ct])
+            blk = pos // self.page_size
+            e_pages = tuple(pages[blk:blk + self.chunk_pages])
+            entry = node.children.get(key)
+            if entry is not None and self._entry_valid(entry[0], entry[1]):
+                node = entry[3]          # already indexed (shared hit)
+            else:
+                gens = tuple(alloc.generation(p) for p in e_pages)
+                child = _TrieNode()
+                new = [e_pages, gens, False, child]
+                node.children[key] = new
+                self._pending.append(new)
+                node = child
+            pos += ct
+        # tail entries index exactly one page past the full chunks; with
+        # a multi-page chunk granule, a sub-chunk run spanning several
+        # pages is the (accepted) coarseness cost and is not indexed
+        if pos < prompt_len and prompt_len - pos <= self.page_size:
+            key = tuple(toks[pos:])
+            entry = node.tails.get(key)
+            if entry is None or not self._entry_valid((entry[0],),
+                                                      (entry[1],)):
+                page = pages[pos // self.page_size]
+                new = [page, alloc.generation(page), False]
+                node.tails[key] = new
+                self._pending.append(new)
+
+    def mark_ready(self) -> None:
+        """Confirm queued entries: their K/V has been dispatched to the
+        device (the admission-boundary prefill ran)."""
+        for entry in self._pending:
+            entry[2] = True              # ready slot of both entry kinds
+        self._pending.clear()
 
 
 def supports_paging(cfg: ArchConfig) -> bool:

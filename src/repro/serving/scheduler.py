@@ -1,4 +1,5 @@
-"""Continuous-batching scheduler: FIFO admission gated on free pages.
+"""Continuous-batching scheduler: FIFO admission gated on free pages,
+with prefix-sharing admission against the page-chunk trie.
 
 The engine (serving/engine.py) decodes in fixed-length scan *segments*;
 this scheduler is the host-side brain that runs at segment boundaries:
@@ -7,11 +8,22 @@ this scheduler is the host-side brain that runs at segment boundaries:
 - ``try_admit`` moves queued requests into free batch slots while the
   page allocator can cover each request's whole lifetime
   (``prompt + max_new + 1`` tokens) — all-or-nothing, FIFO order (no
-  overtaking: a small request never starves a big head-of-line one);
-- ``complete`` retires a finished request, returning its pages to the
-  free list — the very next ``try_admit`` can hand them to a queued
-  request, which is the continuous-batching memory win over the
-  contiguous cache's drain-the-whole-batch behavior.
+  overtaking: a small request never starves a big head-of-line one).
+  With prefix sharing enabled, the admission first consults the
+  :class:`~repro.serving.paged_cache.PrefixCache`: pages already holding
+  an identical page-aligned prompt prefix are *mapped* (refcount bump)
+  instead of allocated, only the uncovered suffix needs fresh pages, and
+  the engine's ragged prefill computes only that suffix.  A matching
+  partially-filled tail page is claimed copy-on-write: the source page is
+  pinned with an extra reference (``cow_src``) until the engine has
+  copied it into the request's own tail page at the boundary dispatch.
+- ``complete`` retires a finished request, dropping one reference per
+  page; pages whose last reference dies return to the free list — the
+  very next ``try_admit`` can hand them out, which is the
+  continuous-batching memory win over the contiguous cache's
+  drain-the-whole-batch behavior.  Trie entries over still-shared pages
+  stay valid (refcount > 0); entries over freed pages invalidate lazily
+  through the allocator's generation counters.
 
 Growth-on-demand admission (admit on prompt pages only, allocate decode
 pages as generation proceeds, preempt on pool exhaustion) packs tighter
@@ -26,7 +38,8 @@ from typing import Any
 
 import numpy as np
 
-from repro.serving.paged_cache import PageAllocator, PagedCacheConfig
+from repro.serving.paged_cache import (PageAllocator, PagedCacheConfig,
+                                       PrefixCache)
 
 
 @dataclasses.dataclass
@@ -43,6 +56,12 @@ class Request:
     tokens: list[int] = dataclasses.field(default_factory=list)
     t_admitted: float | None = None
     t_done: float | None = None
+    # prefix-sharing state: tokens [0, shared_tokens) are served by mapped
+    # pages; the engine prefills only [shared_tokens, prompt_len).
+    shared_tokens: int = 0
+    shared_pages: int = 0              # full pages mapped from the trie
+    cow_src: int | None = None         # tail page to copy-on-write from
+    cow_dst: int | None = None         # the request's own tail page
 
     @property
     def prompt_len(self) -> int:
@@ -54,9 +73,15 @@ class Request:
 
 
 class ContinuousBatchingScheduler:
-    def __init__(self, pcfg: PagedCacheConfig):
+    def __init__(self, pcfg: PagedCacheConfig, *,
+                 sharing: bool | None = None):
         self.pcfg = pcfg
         self.allocator = PageAllocator(pcfg.n_pages)
+        self.sharing = (pcfg.enable_prefix_sharing if sharing is None
+                        else bool(sharing))
+        self.prefix_cache = PrefixCache(
+            self.allocator, pcfg.page_size,
+            chunk_pages=pcfg.prefix_chunk_pages) if self.sharing else None
         self.pending: deque[Request] = deque()
         self.running: dict[int, Request] = {}       # slot -> request
         self.free_slots = sorted(range(pcfg.max_slots))
@@ -78,21 +103,58 @@ class ContinuousBatchingScheduler:
             req = self.pending[0]
             need = self.pcfg.pages_for(req.prompt_len
                                        + req.max_new_tokens + 1)
-            pages = self.allocator.alloc(need)
+            match = None
+            if self.prefix_cache is not None:
+                match = self.prefix_cache.lookup(req.prompt)
+            n_shared = len(match.pages) if match else 0
+            pages = self.allocator.alloc(need - n_shared)
             if pages is None:
                 break                     # FIFO: wait for pages to free up
             self.pending.popleft()
-            req.pages = pages
+            if match and match.pages:
+                self.allocator.share(list(match.pages))
+            req.pages = list(match.pages) + pages if match else pages
+            req.shared_pages = n_shared
+            req.shared_tokens = match.n_tokens if match else 0
+            if match and match.tail_src is not None:
+                # pin the CoW source until the engine has copied it —
+                # its owner could complete before the boundary dispatch.
+                # The fork target is the page holding the LAST matched
+                # token (n_tokens // page_size would index one page past
+                # it when the matched tail fills its page exactly, which
+                # multi-page chunk granules make reachable).
+                self.allocator.share([match.tail_src])
+                req.cow_src = match.tail_src
+                req.cow_dst = req.pages[(match.n_tokens - 1)
+                                        // self.pcfg.page_size]
+            if self.prefix_cache is not None:
+                self.prefix_cache.record(match)
+                self.prefix_cache.insert(req.prompt, req.prompt_len,
+                                         req.pages)
             req.slot = self.free_slots.pop(0)
             self.running[req.slot] = req
             self.n_admitted += 1
             admitted.append(req)
         return admitted
 
+    def finish_boundary(self, admitted: list[Request]) -> None:
+        """Called by the engine after the admission-boundary dispatch:
+        CoW copies have landed (drop the source pins) and the admitted
+        requests' prompt K/V is on device (trie entries become ready)."""
+        for req in admitted:
+            if req.cow_src is not None:
+                self.allocator.release([req.cow_src])
+                req.cow_src = None
+        if self.prefix_cache is not None:
+            self.prefix_cache.mark_ready()
+
     def complete(self, slot: int) -> Request:
-        """Retire the request in ``slot``; its pages are free for the next
-        admission immediately."""
+        """Retire the request in ``slot``; pages whose last reference
+        dies are free for the next admission immediately."""
         req = self.running.pop(slot)
+        if req.cow_src is not None:       # engine never ran the boundary
+            self.allocator.release([req.cow_src])
+            req.cow_src = None
         self.allocator.release(req.pages)
         req.pages = None
         req.slot = None
@@ -100,3 +162,14 @@ class ContinuousBatchingScheduler:
         self.free_slots.sort()
         self.finished.append(req)
         return req
+
+    def stats(self) -> dict[str, int | float]:
+        """Prefix-sharing counters for benches/telemetry."""
+        pc = self.prefix_cache
+        return {
+            "pages_allocated_total": self.allocator.pages_allocated_total,
+            "pages_shared_total": self.allocator.pages_shared_total,
+            "prefix_lookups": pc.lookups if pc else 0,
+            "prefix_hits": pc.hits if pc else 0,
+            "prefix_tokens_matched": pc.tokens_matched if pc else 0,
+        }

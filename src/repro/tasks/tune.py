@@ -130,6 +130,9 @@ def derive_problems(handle: DNNHandle, *, batch_m: int = 128,
     - flash_decode_paged: the continuous-batching hot loop (linear caches
       only) — TUNE picks the page size the paged serving engine lays its
       pool out with.
+    - flash_prefill_ragged: the batched admission-prefill dispatch (same
+      gate) — TUNE picks the suffix q-tile against the tuned page size,
+      which is also the prefix-sharing match granule.
     Largest problems first, capped at ``max_problems``.
     """
     from repro.kernels import autotune
@@ -198,5 +201,20 @@ def derive_problems(handle: DNNHandle, *, batch_m: int = 128,
                 db, cfg.n_heads, cfg.n_kv_heads, hd, cache_len, adt)
             sized.append((seq * cache_len * cfg.n_heads,
                           {"kernel": "flash_decode_paged", **pprob}))
+            # batched ragged admission prefill: the other half of the
+            # serving hot path.  Its page_size — which doubles as the
+            # prefix-sharing match granule — is read back from the tuner's
+            # flash_decode_paged winner (pure cache read; kernel default
+            # on a cold cache), so TUNE tunes the suffix q-tile for the
+            # pool layout it itself selects rather than for a constant.
+            pps = int(autotune.cached_config(
+                "flash_decode_paged", pprob,
+                relax=("slots", "max_len"))["page_size"])
+            sbucket = min(int(seq), 32)
+            fprob = autotune.flash_prefill_ragged_problem(
+                db, sbucket, cfg.n_heads, cfg.n_kv_heads, hd, cache_len,
+                pps, adt)
+            sized.append((seq * cache_len * cfg.n_heads,
+                          {"kernel": "flash_prefill_ragged", **fprob}))
     sized.sort(key=lambda sp: -sp[0])
     return [p for _, p in sized[:max_problems]]

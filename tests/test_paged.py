@@ -1,5 +1,6 @@
 """Paged KV-cache + continuous batching: allocator, kernel-vs-oracle,
-paged-vs-contiguous token equality, page reuse, scheduler admit/evict."""
+paged-vs-contiguous token equality, page reuse, scheduler admit/evict,
+prefix-sharing/CoW, and the batched ragged admission prefill."""
 
 import math
 
@@ -11,12 +12,14 @@ import pytest
 from repro.configs.registry import get_config
 from repro.data.synthetic import lm_tokens
 from repro.kernels.flash_decode_paged import flash_decode_paged
+from repro.kernels.flash_prefill_ragged import flash_prefill_ragged
 from repro.launch.serve import generate, make_serve_fns
 from repro.models import layers as L
 from repro.models.api import build_model
 from repro.serving import (ContinuousBatchingScheduler, PageAllocator,
-                           PagedCacheConfig, PagedServingEngine, Request,
-                           TRASH_PAGE, init_paged_cache)
+                           PagedCacheConfig, PagedServingEngine,
+                           PrefixCache, Request, TRASH_PAGE,
+                           init_paged_cache)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -364,3 +367,467 @@ class TestPagedAutotune:
         wkernels = [p["kernel"]
                     for p in derive_problems(whandle, max_problems=16)]
         assert "flash_decode_paged" not in wkernels
+
+
+# ----------------------------------------------- refcounts + prefix trie
+class TestRefcountedAllocator:
+    def test_share_release_lifecycle(self):
+        a = PageAllocator(8)
+        pages = a.alloc(3)
+        a.share(pages[:2])                      # map into a second request
+        assert a.refcount(pages[0]) == 2 and a.is_shared(pages[0])
+        assert a.release(pages) == [pages[2]]   # only the unshared frees
+        assert a.n_free == 5
+        assert a.release(pages[:2]) == pages[:2]
+        assert a.n_free == 7
+
+    def test_share_free_page_rejected(self):
+        a = PageAllocator(4)
+        p = a.alloc(1)
+        a.release(p)
+        with pytest.raises(ValueError):
+            a.share(p)
+
+    def test_generation_bumps_on_realloc(self):
+        a = PageAllocator(4)
+        p = a.alloc(1)[0]
+        g0 = a.generation(p)
+        a.release([p])
+        assert a.alloc(1) == [p]                # freed-first reuse
+        assert a.generation(p) == g0 + 1
+
+
+def _trie(n_pages=32, ps=8, chunk_pages=1):
+    alloc = PageAllocator(n_pages)
+    return alloc, PrefixCache(alloc, ps, chunk_pages=chunk_pages)
+
+
+class TestPrefixCache:
+    def test_full_chunk_match_and_always_leaves_suffix(self):
+        alloc, pc = _trie()
+        toks = np.arange(24, dtype=np.int32)
+        pages = alloc.alloc(3)
+        pc.insert(toks, 24, pages)
+        pc.mark_ready()
+        m = pc.lookup(toks)
+        # 24 tokens = 3 aligned pages, but the last token must stay
+        # unmatched (the admission still needs first-token logits), so
+        # only the first 2 full pages are shareable
+        assert list(m.pages) == pages[:2]
+        assert m.n_tokens == 16 and m.tail_src is None
+
+    def test_divergent_prompt_partial_match(self):
+        alloc, pc = _trie()
+        toks = np.arange(24, dtype=np.int32)
+        pages = alloc.alloc(3)
+        pc.insert(toks, 24, pages)
+        pc.mark_ready()
+        other = toks.copy()
+        other[12] += 1                          # diverge inside page 2
+        m = pc.lookup(other)
+        assert list(m.pages) == pages[:1] and m.n_tokens == 8
+
+    def test_tail_cow_match_requires_ready(self):
+        alloc, pc = _trie()
+        toks = np.arange(13, dtype=np.int32)
+        pages = alloc.alloc(2)
+        pc.insert(toks, 13, pages)
+        m = pc.lookup(toks)                     # same boundary: not ready
+        assert m.tail_src is None and m.n_tokens == 8
+        pc.mark_ready()
+        m = pc.lookup(toks)
+        assert m.tail_src == pages[1]
+        assert m.tail_tokens == 4               # 13 - 8 capped at len-1
+        assert m.n_tokens == 12
+
+    def test_entries_invalidate_after_free_and_realloc(self):
+        alloc, pc = _trie(n_pages=4)
+        toks = np.arange(16, dtype=np.int32)
+        pages = alloc.alloc(2)
+        pc.insert(toks, 16, pages)
+        pc.mark_ready()
+        alloc.release(pages)                    # owner completes
+        assert pc.lookup(toks).n_tokens == 0    # refcount-0 page: stale
+        other = np.arange(100, 116, dtype=np.int32)
+        p2 = alloc.alloc(2)                     # same ids, new generation
+        assert p2 == pages
+        pc.insert(other, 16, p2)
+        pc.mark_ready()
+        assert pc.lookup(toks).n_tokens == 0    # old tokens never match
+        assert pc.lookup(other).n_tokens == 8
+
+    def test_chunk_pages_granularity(self):
+        alloc, pc = _trie(ps=4, chunk_pages=2)  # 8-token match granule
+        toks = np.arange(20, dtype=np.int32)
+        pages = alloc.alloc(5)
+        pc.insert(toks, 20, pages)
+        pc.mark_ready()
+        m = pc.lookup(toks)
+        # two full 8-token chunks cover 4 pages; the 4-token tail page
+        # is a CoW candidate at page granularity
+        assert list(m.pages) == pages[:4]
+        assert m.tail_src == pages[4] and m.n_tokens == 19
+
+
+class TestPagedCacheConfigRoundTrip:
+    def test_to_from_dict_roundtrip(self):
+        pcfg = PagedCacheConfig(page_size=8, n_pages=17, max_slots=3,
+                                max_blocks=5, segment_len=4,
+                                enable_prefix_sharing=False,
+                                prefix_chunk_pages=2, prefill_bucket=4)
+        d = pcfg.to_dict()
+        assert PagedCacheConfig.from_dict(d) == pcfg
+        assert d["enable_prefix_sharing"] is False
+
+    def test_from_dict_tolerates_old_and_future_configs(self):
+        # a config persisted before the prefix-sharing knobs existed
+        old = {"page_size": 8, "n_pages": 16, "max_slots": 2,
+               "max_blocks": 4, "segment_len": 8}
+        pcfg = PagedCacheConfig.from_dict(old)
+        assert pcfg.enable_prefix_sharing          # default applies
+        # and one persisted by a future version with an unknown knob
+        fut = dict(old, some_future_knob=123)
+        assert PagedCacheConfig.from_dict(fut).page_size == 8
+
+    def test_checkpoint_extra_roundtrip(self, tmp_path):
+        from repro.checkpoint.manager import CheckpointManager
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        pcfg = PagedCacheConfig(page_size=8, prefix_chunk_pages=2)
+        mgr.save(1, {"w": jnp.zeros((2,))},
+                 extra={"paged_cache": pcfg.to_dict()})
+        _, meta = mgr.restore()
+        assert PagedCacheConfig.from_dict(
+            meta["extra"]["paged_cache"]) == pcfg
+
+
+# ------------------------------------------- ragged prefill kernel/oracle
+def _ragged_problem(key, slots, s, h, kvh, d, ps, blocks, offs, lens):
+    ks = jax.random.split(key, 3)
+    n_pages = slots * blocks + 1
+    q = jax.random.normal(ks[0], (slots, s, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (n_pages, ps, kvh, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (n_pages, ps, kvh, d), jnp.float32)
+    perm = jax.random.permutation(ks[2], n_pages - 1) + 1
+    bt = perm[:slots * blocks].reshape(slots, blocks).astype(jnp.int32)
+    return (q, kp, vp, bt, jnp.asarray(offs, jnp.int32),
+            jnp.asarray(lens, jnp.int32))
+
+
+def _ragged_oracle(q, kp, vp, bt, offs, lens):
+    """Direct masked softmax over the shared mask helper — independent of
+    both the kernel and the mea-based layer oracle."""
+    r, s, h, d = q.shape
+    _, ps, kvh, _ = kp.shape
+    n = bt.shape[1] * ps
+    kf = L._expand_kv(kp[bt].reshape(r, n, kvh, d), h)
+    vf = L._expand_kv(vp[bt].reshape(r, n, kvh, d), h)
+    mask = L.ragged_prefill_attention_mask(offs, lens, s, n)
+    sgl = jnp.einsum("bqhd,bkhd->bhqk",
+                     q.astype(jnp.float32) / math.sqrt(d),
+                     kf.astype(jnp.float32))
+    sgl = jnp.where(mask[:, None], sgl, -1e30)
+    w = jax.nn.softmax(sgl, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vf.astype(jnp.float32))
+    valid = jnp.arange(s)[None] < lens[:, None]
+    return jnp.where(valid[:, :, None, None], out, 0.0)
+
+
+class TestRaggedPrefillKernel:
+    @pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2), (7, 1)])
+    @pytest.mark.parametrize("page_size", [4, 8, 16])
+    def test_gqa_and_page_size_grid(self, h, kvh, page_size):
+        slots, s, blocks, d = 3, 8, 4, 8
+        offs = [0, page_size, 2 * page_size]     # suffix after a prefix
+        lens = [8, 5, 0]                         # full / ragged / idle
+        q, kp, vp, bt, off, ln = _ragged_problem(
+            KEY, slots, s, h, kvh, d, page_size, blocks, offs, lens)
+        out = flash_prefill_ragged(q, kp, vp, bt, off, ln, interpret=True,
+                                   block_q=4)
+        ref = _ragged_oracle(q, kp, vp, bt, off, ln)
+        assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+    @pytest.mark.parametrize("block_q", [2, 4, 8, 32])
+    def test_block_q_grid_and_padding(self, block_q):
+        """Ragged suffix lengths with q-tile padding: every tile size
+        reduces to the same result (incl. bq > s, which clamps)."""
+        slots, s, h, kvh, d, ps, blocks = 4, 7, 4, 2, 8, 8, 4
+        offs = [0, 3, 8, 24]
+        lens = [7, 4, 7, 1]
+        q, kp, vp, bt, off, ln = _ragged_problem(
+            jax.random.PRNGKey(3), slots, s, h, kvh, d, ps, blocks, offs,
+            lens)
+        out = flash_prefill_ragged(q, kp, vp, bt, off, ln, interpret=True,
+                                   block_q=block_q)
+        ref = _ragged_oracle(q, kp, vp, bt, off, ln)
+        assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+    def test_mask_helper_is_single_source(self):
+        """The kernel's in-kernel iota mask and the shared helper agree:
+        flipping any single (query, slot) admissibility in the helper
+        changes the oracle away from the kernel."""
+        slots, s, h, kvh, d, ps, blocks = 2, 4, 2, 1, 8, 4, 3
+        offs, lens = [2, 5], [4, 3]
+        q, kp, vp, bt, off, ln = _ragged_problem(
+            jax.random.PRNGKey(5), slots, s, h, kvh, d, ps, blocks, offs,
+            lens)
+        out = flash_prefill_ragged(q, kp, vp, bt, off, ln, interpret=True)
+        ref = _ragged_oracle(q, kp, vp, bt, off, ln)
+        assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+        # causal frontier sanity directly on the helper
+        mask = L.ragged_prefill_attention_mask(off, ln, s, blocks * ps)
+        assert mask[0, 0].astype(int).sum() == offs[0] + 1
+        assert mask[1, 2].astype(int).sum() == offs[1] + 3
+        assert not bool(mask[1, 3].any())        # past lens: dead row
+
+
+# --------------------------------------- prefix-sharing engine behavior
+def _serve_setup(arch="qwen2_7b"):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    return cfg, model, params
+
+
+def _engine_tokens(model, params, pcfg, reqs_fn, mode):
+    reqs = reqs_fn()
+    stats = PagedServingEngine(model, pcfg, prefill_mode=mode).run(
+        reqs, params)
+    return {r.rid: list(r.tokens) for r in reqs}, stats
+
+
+class TestPrefixSharingEngine:
+    @pytest.mark.parametrize("arch", ["qwen2_7b", "starcoder2_3b"])
+    @pytest.mark.parametrize("page_size", [8, 16])
+    def test_burst_page_bound_and_token_equality(self, arch, page_size):
+        """Acceptance: 8 requests sharing a page-aligned common prefix
+        allocate no more than (unique tokens rounded up to pages) plus
+        one CoW page per request, and generate tokens identical to the
+        non-shared serial engine — across GQA ratios, page sizes, and
+        ragged prompt lengths."""
+        cfg, model, params = _serve_setup(arch)
+        n, gen = 8, 4
+        prefix_len = 2 * page_size              # page-aligned prefix
+        suffixes = [3, 7, 1, page_size, 5, 2, 6, 4]   # ragged tails
+        prefix = np.asarray(lm_tokens(prefix_len, cfg.vocab_size,
+                                      seed=31)).astype(np.int32)
+        prompts = [np.concatenate([
+            prefix, np.asarray(lm_tokens(sfx, cfg.vocab_size,
+                                         seed=40 + i)).astype(np.int32)])
+            for i, sfx in enumerate(suffixes)]
+        cap = prefix_len + max(suffixes) + gen + 1
+        blocks = -(-cap // page_size)
+        pcfg = PagedCacheConfig(page_size=page_size,
+                                n_pages=n * blocks + 1, max_slots=n,
+                                max_blocks=blocks, segment_len=4)
+        mk = lambda: [Request(rid=i, prompt=prompts[i].copy(),  # noqa
+                              max_new_tokens=gen) for i in range(n)]
+        base, _ = _engine_tokens(model, params, pcfg, mk, "serial")
+        got, stats = _engine_tokens(model, params, pcfg, mk, "batched")
+        assert got == base
+        # page bound: the prefix is allocated once; each request adds at
+        # most its own unique tokens rounded up to pages, plus one CoW
+        # page of allowance
+        pages_unique = pcfg.pages_for(prefix_len) + sum(
+            pcfg.pages_for(sfx + gen + 1) for sfx in suffixes)
+        assert stats["pages_allocated_total"] <= pages_unique + n
+        # and the sharing actually happened: 7 of 8 admissions hit
+        assert stats["prefix_hits"] == n - 1
+        assert stats["pages_shared_total"] >= \
+            (n - 1) * pcfg.pages_for(prefix_len)
+
+    def test_cow_tail_fork_across_boundaries(self):
+        """A later admission whose prompt extends into a running owner's
+        partially-filled tail page forks it copy-on-write; tokens still
+        match the non-shared engine."""
+        cfg, model, params = _serve_setup()
+        plen = 13                               # 1 full page + 5-token tail
+        prompt = np.asarray(lm_tokens(plen, cfg.vocab_size,
+                                      seed=2)).astype(np.int32)
+        pcfg = PagedCacheConfig(page_size=8, n_pages=32, max_slots=2,
+                                max_blocks=4, segment_len=2)
+        gens = [14, 2, 5]     # owner outlives B; C admitted mid-owner
+        mk = lambda: [Request(rid=i, prompt=prompt.copy(),  # noqa
+                              max_new_tokens=g)
+                      for i, g in enumerate(gens)]
+        base, _ = _engine_tokens(model, params, pcfg, mk, "serial")
+        got, stats = _engine_tokens(model, params, pcfg, mk, "batched")
+        assert got == base
+        # C matched the owner's full page (8) AND its 4-token tail (the
+        # 13th token always stays unmatched for first-token logits)
+        assert stats["prefix_tokens_matched"] >= 8 + 12
+
+    def test_sharing_disabled_by_config(self):
+        cfg, model, params = _serve_setup()
+        pcfg = PagedCacheConfig(page_size=8, n_pages=32, max_slots=4,
+                                max_blocks=4, segment_len=4,
+                                enable_prefix_sharing=False)
+        prompt = np.asarray(lm_tokens(16, cfg.vocab_size,
+                                      seed=7)).astype(np.int32)
+        mk = lambda: [Request(rid=i, prompt=prompt.copy(),  # noqa
+                              max_new_tokens=3) for i in range(3)]
+        got, stats = _engine_tokens(model, params, pcfg, mk, "batched")
+        assert stats["prefix_lookups"] == 0
+        assert stats["pages_shared_total"] == 0
+        base, _ = _engine_tokens(model, params, pcfg, mk, "serial")
+        assert got == base
+
+    def test_kernel_path_tokens_equal_oracle_shared(self):
+        cfg, model, params = _serve_setup()
+        model_k = build_model(cfg, use_kernels=True, interpret=True)
+        prefix = np.asarray(lm_tokens(16, cfg.vocab_size,
+                                      seed=3)).astype(np.int32)
+        prompts = [np.concatenate([
+            prefix, np.asarray(lm_tokens(sfx, cfg.vocab_size,
+                                         seed=50 + sfx)).astype(np.int32)])
+            for sfx in (3, 7, 9)]
+        prompts.append(np.asarray(lm_tokens(11, cfg.vocab_size,
+                                            seed=99)).astype(np.int32))
+        pcfg = PagedCacheConfig(page_size=8, n_pages=40, max_slots=4,
+                                max_blocks=5, segment_len=4)
+        mk = lambda: [Request(rid=i, prompt=prompts[i].copy(),  # noqa
+                              max_new_tokens=5)
+                      for i in range(len(prompts))]
+        oracle, _ = _engine_tokens(model, params, pcfg, mk, "batched")
+        kernel, _ = _engine_tokens(model_k, params, pcfg, mk, "batched")
+        serial, _ = _engine_tokens(model, params, pcfg, mk, "serial")
+        assert oracle == serial
+        assert kernel == serial
+
+
+class TestBatchedPrefillBitIdentical:
+    @pytest.mark.parametrize("plens", [(16, 13, 9), (8, 8, 8), (23,)])
+    def test_pages_bit_identical_to_serial(self, plens):
+        """Acceptance: batched ragged admission prefill writes exactly
+        the same KV pages (and first tokens) as PR 3's serial batch-1
+        prefill, bit for bit."""
+        cfg, model, params = _serve_setup()
+        pcfg = PagedCacheConfig(page_size=8, n_pages=32, max_slots=4,
+                                max_blocks=4, segment_len=4)
+        prompts = [np.asarray(lm_tokens(pl, cfg.vocab_size,
+                                        seed=5 + i)).astype(np.int32)
+                   for i, pl in enumerate(plens)]
+        pools = {}
+        for mode in ("serial", "batched"):
+            eng = PagedServingEngine(model, pcfg, prefill_mode=mode)
+            sched = ContinuousBatchingScheduler(pcfg, sharing=False)
+            for i, p in enumerate(prompts):
+                sched.submit(Request(rid=i, prompt=p, max_new_tokens=1))
+            admitted = sched.try_admit()
+            assert len(admitted) == len(prompts)
+            cache, _ = init_paged_cache(cfg, pcfg, eng.cache_dtype)
+            bt = np.full((pcfg.max_slots, pcfg.max_blocks), TRASH_PAGE,
+                         np.int32)
+            if mode == "batched":
+                cache, toks, _ = eng._admit_batched(cache, bt, admitted,
+                                                    params)
+                first = [toks[r.slot] for r in admitted]
+            else:
+                first = []
+                for req in admitted:
+                    cache, t = eng._admit_serial(cache, bt, req, params)
+                    first.append(t)
+            pools[mode] = (np.asarray(cache["blocks"]["k_pages"]),
+                           np.asarray(cache["blocks"]["v_pages"]),
+                           first,
+                           {r.rid: list(r.pages) for r in admitted})
+        ks, vs, tok_s, pages = pools["serial"]
+        kb, vb, tok_b, pages_b = pools["batched"]
+        assert tok_s == tok_b
+        assert pages == pages_b                  # same allocation order
+        ps = pcfg.page_size
+        for rid, pgs in pages.items():
+            pl = len(prompts[rid])
+            for bi in range(pcfg.pages_for(pl)):
+                valid = min(ps, pl - bi * ps)
+                pg = pgs[bi]
+                assert np.array_equal(ks[:, pg, :valid],
+                                      kb[:, pg, :valid]), (rid, bi)
+                assert np.array_equal(vs[:, pg, :valid],
+                                      vb[:, pg, :valid]), (rid, bi)
+
+
+class TestRaggedPrefillAutotune:
+    def test_registered_and_tunable(self, tmp_path):
+        from repro.kernels import autotune
+        prob = autotune.flash_prefill_ragged_problem(2, 16, 4, 2, 8, 32,
+                                                     8, "float32")
+        cands = autotune.enumerate_candidates("flash_prefill_ragged",
+                                              prob)
+        assert {"block_q": 32} in [c for c, _ in cands]   # default
+        res = autotune.tune("flash_prefill_ragged", prob,
+                            cache_path=str(tmp_path / "c.json"), iters=1)
+        assert res.config["block_q"] >= 1
+        again = autotune.tune("flash_prefill_ragged", prob,
+                              cache_path=str(tmp_path / "c.json"),
+                              iters=1)
+        assert again.cached and again.config == res.config
+
+    def test_tune_task_derives_ragged_prefill_problem(self):
+        from repro.tasks.tune import derive_problems
+        from repro.tasks.handle import DNNHandle
+        cfg = get_config("qwen2_7b", smoke=True)
+        model = build_model(cfg)
+        handle = DNNHandle(kind="lm", name="m",
+                           params=model.init(KEY), model=model)
+        probs = derive_problems(handle, max_problems=16)
+        fpr = [p for p in probs if p["kernel"] == "flash_prefill_ragged"]
+        assert len(fpr) == 1
+        # the page size (the prefix-match granule) rides in the problem:
+        # TUNE tunes the suffix tile against the pool layout it selects
+        assert fpr[0]["page_size"] >= 1
+        wcfg = get_config("h2o_danube_3_4b", smoke=True)   # windowed
+        wmodel = build_model(wcfg)
+        whandle = DNNHandle(kind="lm", name="w",
+                            params=wmodel.init(KEY), model=wmodel)
+        wkernels = [p["kernel"]
+                    for p in derive_problems(whandle, max_problems=16)]
+        assert "flash_prefill_ragged" not in wkernels
+
+
+class TestAdmissionOrdering:
+    def test_same_boundary_sharer_with_longer_suffix(self):
+        """Regression: a sharer whose own suffix outgrows its prefix
+        owner's whole suffix (short cached system prompt + long user
+        message, admitted at the same boundary) must not dispatch before
+        the owner has written the shared pages."""
+        cfg, model, params = _serve_setup()
+        owner = np.asarray(lm_tokens(8, cfg.vocab_size,
+                                     seed=61)).astype(np.int32)
+        long_user = np.asarray(lm_tokens(32, cfg.vocab_size,
+                                         seed=62)).astype(np.int32)
+        sharer = np.concatenate([owner, long_user])
+        pcfg = PagedCacheConfig(page_size=8, n_pages=32, max_slots=2,
+                                max_blocks=6, segment_len=4)
+        mk = lambda: [Request(rid=0, prompt=owner.copy(),  # noqa
+                              max_new_tokens=4),
+                      Request(rid=1, prompt=sharer.copy(),
+                              max_new_tokens=4)]
+        base, _ = _engine_tokens(model, params, pcfg, mk, "serial")
+        got, stats = _engine_tokens(model, params, pcfg, mk, "batched")
+        assert stats["prefix_tokens_matched"] == 8   # sharing did happen
+        assert got == base
+
+    def test_cow_dst_for_exactly_full_tail_page(self):
+        """Regression: a matched tail that fills its page exactly
+        (reachable with multi-page chunk granules) must fork into the
+        page holding the last matched token, not one past it."""
+        cfg, model, params = _serve_setup()
+        owner_p = np.asarray(lm_tokens(20, cfg.vocab_size,
+                                       seed=71)).astype(np.int32)
+        sharer_p = np.concatenate([
+            owner_p, np.asarray(lm_tokens(4, cfg.vocab_size,
+                                          seed=72)).astype(np.int32)])
+        pcfg = PagedCacheConfig(page_size=4, n_pages=40, max_slots=2,
+                                max_blocks=10, segment_len=2,
+                                prefix_chunk_pages=2)
+        gens = [14, 2, 5]       # owner outlives filler; sharer joins late
+        prompts = [owner_p, owner_p, sharer_p]
+        mk = lambda: [Request(rid=i, prompt=prompts[i].copy(),  # noqa
+                              max_new_tokens=g)
+                      for i, g in enumerate(gens)]
+        base, _ = _engine_tokens(model, params, pcfg, mk, "serial")
+        got, stats = _engine_tokens(model, params, pcfg, mk, "batched")
+        # the late sharer matched 2 full 8-token chunks + the full-page
+        # 4-token tail of the running owner (20 of its 24 tokens)
+        assert stats["prefix_tokens_matched"] >= 20
+        assert got == base

@@ -13,6 +13,7 @@ from repro.models.common import apply_rope
 from repro.optim.compression import compress_with_feedback
 from repro.quant.policy import (INT8, LEVELS, PrecisionPolicy, cast_level,
                                 quantize_int8)
+from repro.serving.paged_cache import PageAllocator
 from repro.sparsity.masks import (apply_masks, block_mask, magnitude_mask,
                                   sparsity_report)
 
@@ -93,6 +94,72 @@ def test_apply_masks_idempotent():
                                   np.asarray(twice["a"]["w"]))
     rep = sparsity_report(masks)
     assert rep["zeros"] == 64 - int(masks["a/w"].sum())
+
+
+# -------------------------------------- refcounted page allocator (serving)
+@settings(max_examples=60, deadline=None)
+@given(st.integers(4, 24), st.data())
+def test_page_allocator_interleavings_never_leak(n_pages, data):
+    """Random admit / share-prefix-admit / CoW / complete interleavings:
+    pages are never leaked or double-counted, refcounts always equal the
+    number of live mappings, and every page whose refcount hits 0 is
+    immediately reusable (returns to the free list)."""
+    alloc = PageAllocator(n_pages)
+    total = n_pages - 1              # page 0 is the reserved scratch page
+    live: list[list[int]] = []       # block-table page lists of live reqs
+
+    def check_invariants():
+        held = [p for req in live for p in req]
+        # free + distinct held partitions the allocatable pool: no leak,
+        # no double-count
+        assert alloc.n_free + len(set(held)) == total
+        assert alloc.n_held == len(set(held))
+        # refcount == number of live mappings, and refcount-0 pages are
+        # exactly the free ones
+        from collections import Counter
+        counts = Counter(held)
+        for p in range(1, n_pages):
+            assert alloc.refcount(p) == counts.get(p, 0)
+
+    for _ in range(data.draw(st.integers(1, 30), label="n_ops")):
+        op = data.draw(st.sampled_from(
+            ["admit", "admit_shared", "cow", "complete"]), label="op")
+        if op == "admit":
+            k = data.draw(st.integers(0, total), label="n_fresh")
+            pages = alloc.alloc(k)
+            if pages is not None:
+                assert len(set(pages)) == k and 0 not in pages
+                live.append(pages)
+        elif op == "admit_shared" and live:
+            src = data.draw(st.sampled_from(live), label="src_req")
+            if src:
+                take = data.draw(st.integers(1, len(src)), label="take")
+                shared = src[:take]
+                alloc.share(shared)
+                fresh = alloc.alloc(
+                    data.draw(st.integers(0, 2), label="n_extra"))
+                if fresh is None:     # all-or-nothing admission: roll back
+                    alloc.release(shared)
+                else:
+                    live.append(shared + fresh)
+        elif op == "cow" and live:
+            req = data.draw(st.sampled_from(live), label="cow_req")
+            if req:
+                i = data.draw(st.integers(0, len(req) - 1), label="blk")
+                fresh = alloc.alloc(1)
+                if fresh is not None:  # fork: new page in, old ref out
+                    alloc.release([req[i]])
+                    req[i] = fresh[0]
+        elif op == "complete" and live:
+            idx = data.draw(st.integers(0, len(live) - 1), label="victim")
+            alloc.release(live.pop(idx))
+        check_invariants()
+
+    for req in live:
+        alloc.release(req)
+    assert alloc.n_free == total     # full drain: every page came back
+    with pytest.raises(ValueError):  # and nothing double-frees
+        alloc.release([1])
 
 
 # ---------------------------------------------------- binary search props
