@@ -375,6 +375,108 @@ def flash_decode_paged_problem(slots: int, h: int, kv_heads: int, d: int,
             "dtype": jnp.dtype(dtype).name}
 
 
+# paged decode segment -------------------------------------------------------
+# Not a kernel tile but a *scheduler cadence*: the serving engine decodes
+# in fixed-length lax.scan segments and wakes the host only at segment
+# boundaries (retire/admit/grow/preempt).  Long segments amortize the
+# host sync + dispatch overhead per token; short segments react faster
+# (admissions wait less, finished slots idle less, and the resource
+# manager's growth granule — the pages one segment consumes — shrinks,
+# so an oversubscribed pool preempts less speculatively).  The timing
+# harness can only see the first half of that trade, so candidates all
+# generate the SAME token budget split into different dispatch sizes
+# with a host sync between dispatches — exactly the engine's boundary
+# pattern — and the winner is the cadence whose overhead amortization
+# actually pays on this backend.  The engine reads it back through
+# serving/paged_cache.py::preferred_segment_len.
+SEGMENT_TOKENS = 32          # fixed token budget every candidate pays
+
+
+def _pseg_vmem(problem: dict[str, Any], cfg: dict[str, int]) -> int:
+    # per grid step the resident working set is flash_decode_paged's at
+    # the pool's page size; segment_len moves dispatch count, not tiles
+    d = problem["d"]
+    g = problem["h"] // problem["kv_heads"]
+    ps = problem["page_size"]
+    item = _itemsize(problem["dtype"])
+    blocks = (2 * g * d + 2 * ps * d) * item
+    mask = ps * 4
+    scratch = (2 * g + g * d) * 4
+    temps = 2 * g * ps * 4
+    return blocks + mask + scratch + temps
+
+
+def _pseg_candidates(problem: dict[str, Any]
+                     ) -> list[tuple[dict[str, int], int]]:
+    out = []
+    for sl in (2, 4, 8, 16, SEGMENT_TOKENS):
+        out.append(({"segment_len": sl}, _pseg_vmem(problem, {})))
+    return out
+
+
+@functools.lru_cache(maxsize=16)
+def _pseg_fn(problem_json: str, seg_len: int, interpret: bool):
+    problem = json.loads(problem_json)
+    dtype = jnp.dtype(problem["dtype"])
+    slots, h, d = problem["slots"], problem["h"], problem["d"]
+    kvh, max_len, ps = (problem["kv_heads"], problem["max_len"],
+                        problem["page_size"])
+    blocks = -(-max_len // ps)
+    n_pages = slots * blocks + 1           # + the reserved scratch page
+    q = jax.random.normal(jax.random.PRNGKey(0),
+                          (slots, 1, h, d)).astype(dtype)
+    kp = jax.random.normal(jax.random.PRNGKey(1),
+                           (n_pages, ps, kvh, d)).astype(dtype)
+    vp = jax.random.normal(jax.random.PRNGKey(2),
+                           (n_pages, ps, kvh, d)).astype(dtype)
+    bt = 1 + jnp.arange(slots * blocks, dtype=jnp.int32).reshape(
+        slots, blocks)
+    n = blocks * ps
+    # start half-full: the scan advances seq_lens like a real segment
+    sl0 = jnp.full((slots,), max(1, max_len // 2), jnp.int32)
+
+    def segment(sl):
+        def step(carry, _):
+            cur = carry
+            mask = jnp.arange(n)[None, :] < jnp.minimum(
+                cur + 1, max_len)[:, None]
+            out = flash_decode_paged(q, kp, vp, bt, mask,
+                                     interpret=interpret)
+            return jnp.minimum(cur + 1, max_len - 1), out[:, 0, 0, 0]
+        sl, outs = jax.lax.scan(step, sl, None, length=seg_len)
+        return sl, outs
+
+    return jax.jit(segment), sl0
+
+
+def _pseg_runner(problem: dict[str, Any], cfg: dict[str, int],
+                 interpret: bool) -> Callable[[], Any]:
+    seg_len = min(cfg["segment_len"], SEGMENT_TOKENS)
+    fn, sl0 = _pseg_fn(json.dumps(problem, sort_keys=True), seg_len,
+                       interpret)
+    reps = SEGMENT_TOKENS // seg_len
+
+    def run():
+        sl, outs = sl0, None
+        for _ in range(reps):
+            sl, outs = fn(sl)
+            # the engine pulls control state back at every boundary;
+            # blocking here reproduces that sync cost per dispatch
+            jax.block_until_ready(outs)
+        return outs
+
+    return run
+
+
+def paged_segment_problem(slots: int, h: int, kv_heads: int, d: int,
+                          max_len: int, page_size: int,
+                          dtype) -> dict[str, Any]:
+    return {"slots": int(slots), "h": int(h), "kv_heads": int(kv_heads),
+            "d": int(d), "max_len": int(max_len),
+            "page_size": int(page_size),
+            "dtype": jnp.dtype(dtype).name}
+
+
 # ragged paged prefill -------------------------------------------------------
 def _fpr_vmem(problem: dict[str, Any], cfg: dict[str, int]) -> int:
     d = problem["d"]
@@ -567,6 +669,9 @@ KERNELS: dict[str, KernelEntry] = {
     "flash_decode_paged": KernelEntry(
         "flash_decode_paged", {"page_size": 16},
         _fpd_candidates, _fpd_runner),
+    "paged_segment": KernelEntry(
+        "paged_segment", {"segment_len": 8},
+        _pseg_candidates, _pseg_runner),
     "flash_prefill_ragged": KernelEntry(
         "flash_prefill_ragged", {"block_q": BQ_PREFILL},
         _fpr_candidates, _fpr_runner),

@@ -1,27 +1,38 @@
-"""Serving subsystem: paged KV-cache pool + continuous-batching engine.
+"""Serving subsystem: paged KV-cache pool + continuous-batching engine
+under a quota-aware preemptive resource manager.
 
 - paged_cache: fixed-size page pool, host-side refcounted free-list
   allocator, per-request block tables (vLLM-style paging, TPU-shaped
   layout) and the prefix-sharing trie (PrefixCache) that maps identical
   page-aligned prompt prefixes onto the same physical pages with
-  copy-on-write tail forks.
-- scheduler: FIFO request queue with admission-on-free-pages, prefix-hit
-  page mapping, and page reclamation when requests complete.
-- engine: drives batched ragged admission prefill (one dispatch per
-  segment boundary covering every admission's post-prefix suffix) +
-  fixed-length decode scan segments, swapping finished requests for
-  queued ones at segment boundaries.
+  copy-on-write tail forks and an LRU pin budget that retains hot
+  prefixes beyond their last request's lifetime.
+- resources: the ResourceManager — growth-on-demand page sizing, host
+  swap preemption snapshots, per-tenant page budgets with marginal
+  charging for shared pages, deficit-round-robin scheduling credits, and
+  victim selection (the policy layer everything else allocates through).
+- scheduler: per-tenant request queues with DRR admission (restores
+  before fresh admissions, no overtaking within a tenant), segment-
+  boundary growth/preemption planning, and refcount-only page
+  accounting.
+- engine: drives batched ragged admission prefill + fixed-length decode
+  scan segments; at segment boundaries it grows block tables, swaps
+  preempted requests' pages to host memory, and restores them later in
+  a single scatter dispatch (prefix-trie re-match first).
 """
 
 from repro.serving.paged_cache import (PageAllocator, PagedCacheConfig,
                                        PrefixCache, PrefixMatch,
                                        TRASH_PAGE, init_paged_cache,
                                        preferred_page_size)
+from repro.serving.resources import (DEFAULT_TENANT, ResourceManager,
+                                     SwapState, TenantConfig)
 from repro.serving.scheduler import ContinuousBatchingScheduler, Request
 from repro.serving.engine import PagedServingEngine
 
 __all__ = [
     "PageAllocator", "PagedCacheConfig", "PrefixCache", "PrefixMatch",
     "TRASH_PAGE", "init_paged_cache", "preferred_page_size",
+    "DEFAULT_TENANT", "ResourceManager", "SwapState", "TenantConfig",
     "ContinuousBatchingScheduler", "Request", "PagedServingEngine",
 ]

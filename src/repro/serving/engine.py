@@ -24,14 +24,29 @@ One engine owns: a paged cache pool (serving/paged_cache.py), a scheduler
   sampling, per-slot active masks, and seq_lens advancement carried
   in-graph.
 
-The host loop runs at segment boundaries only: pull back the tiny control
-state (tokens, active, n_gen, seq_lens), retire finished requests (page
-references dropped, block-table row parked on the scratch page), admit
-queued ones into the freed slots/pages, and dispatch the next segment.
-KV state never moves on admission or eviction — only block-table rows and
-page refcounts change — which is what lets one slot batch serve an
-arrival process whose requests start and finish at different times while
-sharing both physical pages and admission-prefill dispatches.
+The host loop runs at segment boundaries only, in a fixed order the
+resource manager's correctness depends on:
+
+1. retire finished requests (refcounts drop, rows park on the scratch
+   page) — this happened at the previous boundary's tail;
+2. **grow**: top every running request up to the next segment's page
+   coverage (serving/scheduler.py::plan_growth), preempting victims when
+   the pool runs dry;
+3. **swap out**: ``device_get`` every victim's snapshotted pages to host
+   *before any dispatch* — the pages are back on the free list and the
+   very next admission may write them;
+4. admit: preempted requests **restore first** — trie-rematched prefix
+   pages are pure block-table aliasing, the remaining blocks come back
+   in one ``_write_pages`` scatter from the host image — then fresh
+   requests prefill (batched ragged or serial).  Restores must dispatch
+   before fresh prefills: a fresh admission may prefix-share a
+   restore-range page, and its attention needs the host image resident;
+5. dispatch the next segment, then clear anti-livelock protection on
+   every slot that generated through it.
+
+KV state never moves on admission, growth, or completion — only
+block-table rows and page refcounts change; it moves exactly twice per
+preemption cycle (out to host, back in one scatter).
 """
 
 from __future__ import annotations
@@ -44,12 +59,14 @@ import numpy as np
 
 from repro.serving.paged_cache import (PagedCacheConfig, TRASH_PAGE,
                                        init_paged_cache, supports_paging)
+from repro.serving.resources import DEFAULT_TENANT
 from repro.serving.scheduler import ContinuousBatchingScheduler, Request
 
 
 class PagedServingEngine:
     def __init__(self, model, pcfg: PagedCacheConfig,
-                 cache_dtype=jnp.bfloat16, prefill_mode: str = "batched"):
+                 cache_dtype=jnp.bfloat16, prefill_mode: str = "batched",
+                 tenants=None):
         if not supports_paging(model.cfg):
             raise ValueError(f"{model.cfg.name} does not support the "
                              f"paged decode path")
@@ -59,6 +76,7 @@ class PagedServingEngine:
         self.pcfg = pcfg
         self.cache_dtype = cache_dtype
         self.prefill_mode = prefill_mode
+        self.tenants = list(tenants) if tenants is not None else None
         # prefix sharing needs the ragged suffix prefill: the serial
         # batch-1 path always computes (and would re-store) whole prompts
         self.sharing = pcfg.enable_prefix_sharing and \
@@ -251,13 +269,53 @@ class PagedServingEngine:
         return ({req.slot: int(tok1[i, 0]) for i, req in enumerate(reqs)},
                 dict(cache, blocks=blocks))
 
+    def _swap_out(self, cache, swap) -> None:
+        """Pull a preempted request's pages back to host memory.  Must
+        run before any subsequent dispatch: the pages are already on the
+        free list, and the next admission/restore may overwrite them —
+        the device data is only guaranteed intact until then."""
+        idx = jnp.asarray(np.asarray(swap.pages, np.int32))
+        swap.host_k = np.asarray(cache["blocks"]["k_pages"][:, idx])
+        swap.host_v = np.asarray(cache["blocks"]["v_pages"][:, idx])
+
+    def _restore(self, cache, bt, req):
+        """One-dispatch restore of a preempted request: blocks below
+        ``restore_blocks[0]`` were re-matched from the prefix trie (pure
+        aliasing, no data movement); the rest scatter back from the host
+        image through the same jitted ``_write_pages`` the serial
+        admission uses.  Row counts pad to a power of two (pad rows land
+        on the scratch page) so the compiled-shape space stays small."""
+        slot = req.slot
+        bt[slot] = TRASH_PAGE
+        bt[slot, :len(req.pages)] = req.pages
+        b0, b1 = req.restore_blocks
+        if b1 <= b0:
+            return cache, 0
+        rows = np.asarray(req.pages[b0:b1], np.int32)
+        pk = req.swap.host_k[:, b0:b1]
+        pv = req.swap.host_v[:, b0:b1]
+        n = len(rows)
+        a = 1
+        while a < n:
+            a *= 2
+        if a > n:
+            rows = np.concatenate(
+                [rows, np.full((a - n,), TRASH_PAGE, np.int32)])
+            pad = np.zeros((pk.shape[0], a - n) + pk.shape[2:], pk.dtype)
+            pk = np.concatenate([pk, pad], axis=1)
+            pv = np.concatenate([pv, pad], axis=1)
+        blocks = self._write_pages(cache["blocks"], jnp.asarray(pk),
+                                   jnp.asarray(pv), jnp.asarray(rows))
+        return dict(cache, blocks=blocks), 1
+
     def run(self, requests: list[Request], params) -> dict:
         """Serve ``requests`` (honoring their ``arrival`` offsets) to
         completion.  Mutates each request in place (tokens, t_admitted,
         t_done, all relative to engine start) and returns run counters.
         """
         pcfg = self.pcfg
-        sched = ContinuousBatchingScheduler(pcfg, sharing=self.sharing)
+        sched = ContinuousBatchingScheduler(pcfg, sharing=self.sharing,
+                                            tenants=self.tenants)
         cache, _ = init_paged_cache(self.model.cfg, pcfg, self.cache_dtype)
         r, m = pcfg.max_slots, pcfg.max_blocks
         bt = np.full((r, m), TRASH_PAGE, np.int32)
@@ -271,19 +329,28 @@ class PagedServingEngine:
         nxt_arrival = 0
         n_segments = 0
         n_prefill_dispatches = 0
+        n_restore_dispatches = 0
         prefill_s = 0.0
         decode_s = 0.0
+        no_progress = 0
         t0 = timer()
+
+        def park_slot(slot: int) -> None:
+            """Return a vacated slot to the inert state: row on the
+            scratch page, no position, no activity.  Shared by
+            retirement and preemption — the two ways a slot empties."""
+            bt[slot] = TRASH_PAGE
+            seq_lens[slot] = 0
+            tok[slot] = 0
+            active[slot] = False
+            n_gen[slot] = 0
 
         def retire_finished(now: float) -> None:
             for slot, req in list(sched.running.items()):
                 if n_gen[slot] >= req.max_new_tokens:
                     req.t_done = now
                     sched.complete(slot)
-                    bt[slot] = TRASH_PAGE
-                    seq_lens[slot] = 0
-                    active[slot] = False
-                    n_gen[slot] = 0
+                    park_slot(slot)
 
         def start_request(req, first_tok: int, now: float) -> None:
             slot = req.slot
@@ -301,17 +368,45 @@ class PagedServingEngine:
                    and queue[nxt_arrival].arrival <= now):
                 sched.submit(queue[nxt_arrival])
                 nxt_arrival += 1
+            # growth-on-demand: back the next segment's writes, possibly
+            # preempting victims...
+            preempted = sched.plan_growth()
+            # ...whose pages must reach host memory before any dispatch
+            # below can recycle them (their refs are already dropped)
+            for req in preempted:
+                self._swap_out(cache, req.swap)
+                park_slot(req.swap.slot)
+            # grown block tables: new pages append to the owned prefix
+            for slot, req in sched.running.items():
+                bt[slot, :len(req.pages)] = req.pages
             admitted = sched.try_admit()
+            fresh = [r for r in admitted if r.swap is None]
+            restored = [r for r in admitted if r.swap is not None]
             if admitted:
                 t_pf = timer()
-                if self.prefill_mode == "batched":
+                # restores scatter FIRST: a same-boundary fresh admission
+                # may trie-share a restore-range page (full-chunk entries
+                # are matchable pre-ready by design), so its prefill must
+                # only dispatch after the host image is back on device.
+                # The reverse order is safe — a restore reads nothing at
+                # scatter time; its aliased pages are only attended at
+                # the next segment, after every boundary dispatch.
+                for req in restored:
+                    cache, n_disp = self._restore(cache, bt, req)
+                    n_restore_dispatches += n_disp
+                    slot = req.slot
+                    seq_lens[slot] = req.swap.n_tokens
+                    tok[slot] = req.tokens[-1]
+                    n_gen[slot] = len(req.tokens)
+                    max_new[slot] = req.max_new_tokens
+                if fresh and self.prefill_mode == "batched":
                     cache, tok1, n_disp = self._admit_batched(
-                        cache, bt, admitted, params)
-                    for req in admitted:
+                        cache, bt, fresh, params)
+                    for req in fresh:
                         start_request(req, tok1[req.slot], timer() - t0)
                     n_prefill_dispatches += n_disp
-                else:
-                    for req in admitted:
+                elif fresh:
+                    for req in fresh:
                         cache, first = self._admit_serial(cache, bt, req,
                                                           params)
                         start_request(req, first, timer() - t0)
@@ -326,7 +421,25 @@ class PagedServingEngine:
                     wait = queue[nxt_arrival].arrival - (timer() - t0)
                     if wait > 0:
                         time.sleep(wait)
+                elif sched.has_work:
+                    # queued/preempted requests, nothing running, no
+                    # arrivals left: only an admission can make progress
+                    # and this boundary produced none — count it toward
+                    # the deadlock guard instead of busy-spinning
+                    no_progress += 1
+                    if no_progress > 256:
+                        raise RuntimeError(
+                            "serving engine made no progress for 256 "
+                            "consecutive boundaries with queued work "
+                            "and nothing running: resource-manager "
+                            "deadlock (see ResourceManager.stats())")
                 continue
+            # activity is a pure function of scheduler state: stalled
+            # slots sit a segment out (their frozen write slot stays
+            # inside pages they own), everyone else runs to max_new
+            for slot, req in sched.running.items():
+                active[slot] = (not req.stalled) \
+                    and n_gen[slot] < max_new[slot]
 
             t_seg = timer()
             cache = dict(cache, block_tables=jnp.asarray(bt),
@@ -346,12 +459,30 @@ class PagedServingEngine:
             for slot, req in sched.running.items():
                 req.tokens.extend(
                     int(t) for t in toks[emits[:, slot], slot])
+            # anti-livelock: surviving one generated segment makes a
+            # request preemptable again
+            sched.end_segment(slot for slot in sched.running
+                              if emits[:, slot].any())
+            if emits.any() or admitted or preempted:
+                no_progress = 0
+            else:
+                # unreachable by the liveness argument in resources.py
+                # (a stall implies an unprotected victim exists, and
+                # protected requests are freshly provisioned to run) —
+                # fail loudly rather than spin if a policy bug lands
+                no_progress += 1
+                if no_progress > 256:
+                    raise RuntimeError(
+                        "serving engine made no progress for 256 "
+                        "consecutive segments: resource-manager "
+                        "deadlock (see ResourceManager.stats())")
             retire_finished(timer() - t0)
 
         return {"n_segments": n_segments,
                 "n_admitted": sched.n_admitted,
                 "n_finished": len(sched.finished),
                 "n_prefill_dispatches": n_prefill_dispatches,
+                "n_restore_dispatches": n_restore_dispatches,
                 "prefill_s": prefill_s,    # summed admission dispatches
                 "decode_s": decode_s,      # summed segment dispatches
                 "wall_s": timer() - t0,
@@ -369,8 +500,12 @@ def warmup(engine: PagedServingEngine, params, prompt_len: int,
     shared-prefix traffic the simplest warmup is running the actual
     workload once untimed, which visits every bucket it will use.
     """
+    # a tenant-configured engine rejects unknown tenant names (closed
+    # roster), so warmup traffic runs as the first configured tenant
+    tenant = (engine.tenants[0].name if engine.tenants
+              else DEFAULT_TENANT)
     reqs = [Request(rid=f"warmup{i}",
                     prompt=np.zeros((prompt_len,), np.int32),
-                    max_new_tokens=max_new_tokens)
+                    max_new_tokens=max_new_tokens, tenant=tenant)
             for i in range(n_requests)]
     engine.run(reqs, params)

@@ -30,6 +30,7 @@ at pool-construction time — the layout is fixed once allocated.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Any
 
 import jax.numpy as jnp
@@ -61,10 +62,53 @@ class PagedCacheConfig:
     # of this bucket so one boundary's admissions share a single ragged
     # dispatch with a bounded number of compiled shapes.
     prefill_bucket: int = 8
+    # Growth-on-demand granule, in pages: at each segment boundary the
+    # resource manager (serving/resources.py) tops a running request up to
+    # the next segment's coverage in multiples of this, trading allocator
+    # churn against packing slack.  0 = auto: the pages one decode segment
+    # consumes — which makes the granule a tuned quantity, since both
+    # page_size (flash_decode_paged) and segment_len (paged_segment) come
+    # from the autotuner.
+    growth_pages: int = 0
+    # Prefix-cache retention: an LRU budget of pages the PrefixCache
+    # itself holds references on, so a hot prefix (a system prompt)
+    # survives the idle gap after its last request completes.  Pinned
+    # pages are evicted instantly under allocator pressure (the resource
+    # manager's pressure callback) before any request is preempted.
+    retain_pages: int = 0
 
     def pages_for(self, n_tokens: int) -> int:
         """Pages needed to hold ``n_tokens`` cache slots."""
         return -(-int(n_tokens) // self.page_size)
+
+    @property
+    def growth_granule(self) -> int:
+        """Pages added per growth step (auto: one segment's worth)."""
+        return self.growth_pages or max(1, self.pages_for(self.segment_len))
+
+    def lifetime_tokens(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Cache slots a request occupies when fully generated (+1: the
+        final decode step still writes its token's K/V)."""
+        return prompt_len + max_new_tokens + 1
+
+    def coverage_tokens(self, seq_len: int, prompt_len: int,
+                        max_new_tokens: int) -> int:
+        """Cache slots that must be page-backed before the next decode
+        segment, given ``seq_len`` resident tokens: one segment of
+        writes plus the parked write slot an inactive row keeps using,
+        capped at the whole lifetime.  This single formula IS the
+        stall-safety invariant — admission, growth, and restore all size
+        against it, so a slot denied growth can sit a segment out with
+        its frozen write slot still inside pages it owns."""
+        return min(seq_len + self.segment_len + 1,
+                   self.lifetime_tokens(prompt_len, max_new_tokens))
+
+    def admission_tokens(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Coverage a fresh admission needs: the prompt is the resident
+        position.  Everything past this is allocated on demand at later
+        segment boundaries."""
+        return self.coverage_tokens(prompt_len, prompt_len,
+                                    max_new_tokens)
 
     @property
     def prefix_match_tokens(self) -> int:
@@ -133,6 +177,11 @@ class PageAllocator:
         self._gen = [0] * n_pages                     # bumped per alloc
         self.pages_allocated_total = 0                # fresh allocs (stats)
         self.pages_shared_total = 0                   # share() refs (stats)
+        # pressure telemetry: the tightest the pool ever got, and how many
+        # alloc() calls bounced — what the resource manager's preemption
+        # policy and the bench rows read back
+        self.free_low_water = n_pages - 1
+        self.alloc_failures = 0
 
     @property
     def n_free(self) -> int:
@@ -157,12 +206,14 @@ class PageAllocator:
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
+            self.alloc_failures += 1
             return None
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self._refs[p] = 1
             self._gen[p] += 1
         self.pages_allocated_total += n
+        self.free_low_water = min(self.free_low_water, len(self._free))
         return pages
 
     def share(self, pages: list[int]) -> None:
@@ -234,7 +285,7 @@ class PrefixCache:
     """
 
     def __init__(self, allocator: PageAllocator, page_size: int,
-                 chunk_pages: int = 1):
+                 chunk_pages: int = 1, retain_pages: int = 0):
         self.allocator = allocator
         self.page_size = int(page_size)
         self.chunk_pages = int(chunk_pages)
@@ -244,6 +295,15 @@ class PrefixCache:
         self.lookups = 0
         self.hits = 0                    # lookups matching >= 1 token
         self.tokens_matched = 0
+        # Retention pins: an LRU of <= retain_pages full-chunk pages the
+        # cache itself holds one reference on, so a hot prefix outlives
+        # its last request.  A pinned page can never be freed, so its
+        # generation never moves and its trie entries stay valid — the
+        # pin IS the retention.  Only immutable full-chunk pages are
+        # pinned (a tail page's owner decodes into it).
+        self.retain_pages = int(retain_pages)
+        self._pins: OrderedDict[int, None] = OrderedDict()
+        self.pin_evictions = 0
 
     def _entry_valid(self, pages, gens) -> bool:
         alloc = self.allocator
@@ -304,6 +364,48 @@ class PrefixCache:
         if match.n_tokens:
             self.hits += 1
             self.tokens_matched += match.n_tokens
+            self._touch_pins(match.pages)    # a consumed hit is "hot"
+
+    # ------------------------------------------------------ retention pins
+    def _touch_pins(self, pages) -> None:
+        """LRU-touch ``pages``; pin live unpinned ones under the budget,
+        evicting the coldest pins to make room.  ``pages`` arrive in
+        prefix order and are touched in *reverse*: trie matching is
+        sequential from the root, so a deep page is worthless without the
+        shallow ones before it — touching shallow pages last keeps them
+        hottest, and eviction truncates the retained prefix from its
+        tail instead of beheading it."""
+        if not self.retain_pages:
+            return
+        for p in reversed(list(pages)):
+            if p in self._pins:
+                self._pins.move_to_end(p)
+            elif self.allocator.refcount(p) > 0:
+                while len(self._pins) >= self.retain_pages:
+                    self._evict_pin()
+                self.allocator.share([p])
+                self._pins[p] = None
+
+    def _evict_pin(self) -> int:
+        """Drop the LRU pin; returns how many pages actually freed (0 when
+        other requests still reference the page)."""
+        page, _ = self._pins.popitem(last=False)
+        self.pin_evictions += 1
+        return len(self.allocator.release([page]))
+
+    def release_pins(self, n_pages: int) -> int:
+        """Allocator-pressure callback: evict LRU pins until ``n_pages``
+        pages returned to the free list (or no pins remain).  Retention is
+        strictly weaker than any request's demand — the resource manager
+        calls this before considering preemption."""
+        freed = 0
+        while self._pins and freed < n_pages:
+            freed += self._evict_pin()
+        return freed
+
+    @property
+    def pinned_pages(self) -> int:
+        return len(self._pins)
 
     def insert(self, tokens: np.ndarray, prompt_len: int,
                pages: list[int]) -> None:
@@ -350,8 +452,14 @@ class PrefixCache:
     def mark_ready(self) -> None:
         """Confirm queued entries: their K/V has been dispatched to the
         device (the admission-boundary prefill ran)."""
+        pinnable: list[int] = []
         for entry in self._pending:
             entry[2] = True              # ready slot of both entry kinds
+            if len(entry) == 4:          # full-chunk entry: pinnable
+                pinnable.extend(entry[0])
+        # one prefix-ordered touch across the whole boundary, so the
+        # reverse-touch policy sees the chunks in trie order
+        self._touch_pins(pinnable)
         self._pending.clear()
 
 
@@ -417,3 +525,23 @@ def preferred_page_size(cfg: ArchConfig, pcfg_slots: int,
     tile = autotune.cached_config("flash_decode_paged", prob,
                                   relax=("slots", "max_len"))
     return int(tile["page_size"])
+
+
+def preferred_segment_len(cfg: ArchConfig, pcfg_slots: int,
+                          max_len: int) -> int:
+    """Tuned decode-segment length (scheduler cadence) for this arch's
+    serving shape — same pure-read contract as
+    :func:`preferred_page_size`.  The problem is keyed against the tuned
+    page size, so TUNE picks the cadence for the pool layout it itself
+    selected; with it comes the resource manager's default growth
+    granule (``PagedCacheConfig.growth_granule`` = pages per segment),
+    making both the segment length and the growth granule tuned
+    quantities rather than constants."""
+    from repro.kernels import autotune
+    ps = preferred_page_size(cfg, pcfg_slots, max_len)
+    prob = autotune.paged_segment_problem(
+        pcfg_slots, cfg.n_heads, cfg.n_kv_heads, cfg.hd, max_len, ps,
+        str(cfg.adt))
+    tile = autotune.cached_config("paged_segment", prob,
+                                  relax=("slots", "max_len"))
+    return int(tile["segment_len"])

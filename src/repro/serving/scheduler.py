@@ -1,45 +1,52 @@
-"""Continuous-batching scheduler: FIFO admission gated on free pages,
-with prefix-sharing admission against the page-chunk trie.
+"""Continuous-batching scheduler over the quota-aware resource manager.
 
 The engine (serving/engine.py) decodes in fixed-length scan *segments*;
-this scheduler is the host-side brain that runs at segment boundaries:
+this scheduler is the host-side brain that runs at segment boundaries,
+with every page/quota/victim decision delegated to
+:class:`~repro.serving.resources.ResourceManager`:
 
-- ``submit`` queues a request (validated against pool capacity once);
-- ``try_admit`` moves queued requests into free batch slots while the
-  page allocator can cover each request's whole lifetime
-  (``prompt + max_new + 1`` tokens) — all-or-nothing, FIFO order (no
-  overtaking: a small request never starves a big head-of-line one).
-  With prefix sharing enabled, the admission first consults the
-  :class:`~repro.serving.paged_cache.PrefixCache`: pages already holding
-  an identical page-aligned prompt prefix are *mapped* (refcount bump)
-  instead of allocated, only the uncovered suffix needs fresh pages, and
-  the engine's ragged prefill computes only that suffix.  A matching
-  partially-filled tail page is claimed copy-on-write: the source page is
-  pinned with an extra reference (``cow_src``) until the engine has
-  copied it into the request's own tail page at the boundary dispatch.
-- ``complete`` retires a finished request, dropping one reference per
-  page; pages whose last reference dies return to the free list — the
-  very next ``try_admit`` can hand them out, which is the
-  continuous-batching memory win over the contiguous cache's
-  drain-the-whole-batch behavior.  Trie entries over still-shared pages
-  stay valid (refcount > 0); entries over freed pages invalidate lazily
-  through the allocator's generation counters.
+- ``submit`` queues a request onto its tenant's FIFO queue (validated
+  once against pool capacity and the tenant's page budget);
+- ``plan_growth`` (first at each boundary) tops every running request up
+  to the next segment's page coverage — growth-on-demand instead of the
+  old whole-lifetime reservation.  A dry pool first evicts the prefix
+  cache's retention pins, then **preempts** a victim (swap its pages to
+  host, recycle them); a quota-dry tenant can only preempt its own
+  requests.  A grower with no admissible victim *stalls* for one segment
+  (inactive, its frozen write slot still backed by pages it owns) and
+  retries at the next boundary.
+- ``try_admit`` runs deficit-round-robin across tenant queues — restores
+  ahead of fresh admissions, FIFO within a tenant (no overtaking), each
+  admission billed its *marginal* fresh pages (prefix-shared pages are
+  free).  Fresh admissions map the longest resident prompt prefix from
+  the trie exactly as before; preempted requests re-admit with a
+  prefix-trie re-match plus a host swap-in plan for the remainder.
+  Admission never preempts — only a running request's growth does — so
+  a queued burst cannot evict in-flight work.
+- ``complete`` retires a finished request; all page accounting flows
+  through the allocator's refcounts via ``ResourceManager.release_request``
+  (the PR-3/4 scheduler kept a parallel whole-lifetime page count that
+  growth-on-demand made wrong; the refcounts are now the only truth).
+- ``end_segment`` clears the anti-livelock ``protected`` flag on every
+  request that generated through the segment — from then on it is a
+  preemption candidate again.
 
-Growth-on-demand admission (admit on prompt pages only, allocate decode
-pages as generation proceeds, preempt on pool exhaustion) packs tighter
-but needs in-flight preemption; it is a ROADMAP open item.
+The scheduler moves no device data: the engine executes the swap
+(``device_get`` before any same-boundary dispatch) and the one-dispatch
+restore scatter, in the order run() documents.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Any
+from typing import Any, Iterable
 
 import numpy as np
 
-from repro.serving.paged_cache import (PageAllocator, PagedCacheConfig,
-                                       PrefixCache)
+from repro.serving.paged_cache import PagedCacheConfig
+from repro.serving.resources import (DEFAULT_TENANT, AdmissionPlan,
+                                     ResourceManager, SwapState,
+                                     TenantConfig)
 
 
 @dataclasses.dataclass
@@ -49,8 +56,9 @@ class Request:
     prompt: np.ndarray                 # (prompt_len,) int32
     max_new_tokens: int
     arrival: float = 0.0               # offset from engine start (bench)
+    tenant: str = DEFAULT_TENANT
 
-    # runtime state, owned by the scheduler/engine
+    # runtime state, owned by the scheduler/resource manager/engine
     slot: int | None = None
     pages: list[int] | None = None
     tokens: list[int] = dataclasses.field(default_factory=list)
@@ -62,6 +70,16 @@ class Request:
     shared_pages: int = 0              # full pages mapped from the trie
     cow_src: int | None = None         # tail page to copy-on-write from
     cow_dst: int | None = None         # the request's own tail page
+    # resource-manager state
+    charged: int = 0                   # fresh pages billed to the tenant
+    admit_seq: int = -1                # admission order (victim policy)
+    protected: bool = False            # anti-livelock: no preemption yet
+    stalled: bool = False              # growth denied; inactive one segment
+    swap: SwapState | None = None      # host image while preempted
+    n_preempted: int = 0               # times this request was swapped out
+    # host-image block range [b0, b1) the engine scatters on restore (the
+    # blocks before b0 were re-matched from the prefix trie)
+    restore_blocks: tuple[int, int] = (0, 0)
 
     @property
     def prompt_len(self) -> int:
@@ -74,102 +92,165 @@ class Request:
 
 class ContinuousBatchingScheduler:
     def __init__(self, pcfg: PagedCacheConfig, *,
-                 sharing: bool | None = None):
+                 sharing: bool | None = None,
+                 tenants: Iterable[TenantConfig] | None = None):
         self.pcfg = pcfg
-        self.allocator = PageAllocator(pcfg.n_pages)
-        self.sharing = (pcfg.enable_prefix_sharing if sharing is None
-                        else bool(sharing))
-        self.prefix_cache = PrefixCache(
-            self.allocator, pcfg.page_size,
-            chunk_pages=pcfg.prefix_chunk_pages) if self.sharing else None
-        self.pending: deque[Request] = deque()
+        self.rm = ResourceManager(pcfg, tenants, sharing=sharing)
+        # aliases: the allocator/trie are owned by the resource manager
+        self.allocator = self.rm.allocator
+        self.sharing = self.rm.sharing
+        self.prefix_cache = self.rm.prefix_cache
         self.running: dict[int, Request] = {}       # slot -> request
         self.free_slots = sorted(range(pcfg.max_slots))
         self.finished: list[Request] = []
         self.n_admitted = 0
 
     @property
+    def pending(self) -> list[Request]:
+        """Queued requests across all tenants (restores first)."""
+        return self.rm.queued()
+
+    @property
     def has_work(self) -> bool:
-        return bool(self.pending or self.running)
+        return bool(self.rm.has_queued or self.running)
 
     def submit(self, req: Request) -> None:
-        self.pcfg.validate_request(req.prompt_len, req.max_new_tokens)
-        self.pending.append(req)
+        self.rm.validate(req)
+        self.rm.enqueue(req)
 
+    # ------------------------------------------------- growth + preemption
+    def plan_growth(self) -> list[Request]:
+        """Top every running request up to next-segment page coverage,
+        preempting victims when allocations bounce.  Oldest admissions
+        grow first (they are closest to finishing — freeing everything).
+        Returns the preempted requests, whose ``swap`` snapshots the
+        engine must ``device_get`` before its next dispatch."""
+        preempted: list[Request] = []
+        for req in sorted(self.running.values(), key=lambda r: r.admit_seq):
+            if req.swap is not None:
+                continue                  # preempted earlier this boundary
+            need = self.rm.growth_need(req)
+            if need == 0:
+                req.stalled = False
+                continue
+            while True:
+                pages, reason = self.rm.grow(req, need)
+                if pages is not None:
+                    req.stalled = False
+                    break
+                if reason == "pool":
+                    short = need - self.rm.allocator.n_free
+                    if self.rm.release_pressure(short) > 0:
+                        continue          # pins yielded: retry the alloc
+                    victim = self.rm.pick_victim(self.running.values(),
+                                                 exclude=req)
+                else:                     # quota: the tenant evicts itself
+                    victim = self.rm.pick_victim(self.running.values(),
+                                                 exclude=req,
+                                                 tenant=req.tenant)
+                if victim is None:
+                    req.stalled = True    # safe: coverage >= frozen slot
+                    break
+                self._preempt(victim)
+                preempted.append(victim)
+        return preempted
+
+    def _preempt(self, victim: Request) -> None:
+        slot = victim.slot
+        self.rm.preempt(victim)           # snapshot + release + requeue
+        victim.n_preempted += 1
+        victim.stalled = False
+        victim.slot = None
+        del self.running[slot]
+        self.free_slots.append(slot)
+        self.free_slots.sort()
+
+    # ----------------------------------------------------------- admission
     def try_admit(self) -> list[Request]:
-        """Admit queued requests while a slot and enough pages are free."""
-        admitted = []
-        while self.pending and self.free_slots:
-            req = self.pending[0]
-            need = self.pcfg.pages_for(req.prompt_len
-                                       + req.max_new_tokens + 1)
-            match = None
-            if self.prefix_cache is not None:
-                match = self.prefix_cache.lookup(req.prompt)
-            n_shared = len(match.pages) if match else 0
-            pages = self.allocator.alloc(need - n_shared)
-            if pages is None:
-                break                     # FIFO: wait for pages to free up
-            self.pending.popleft()
-            if match and match.pages:
-                self.allocator.share(list(match.pages))
-            req.pages = list(match.pages) + pages if match else pages
-            req.shared_pages = n_shared
-            req.shared_tokens = match.n_tokens if match else 0
-            if match and match.tail_src is not None:
-                # pin the CoW source until the engine has copied it —
-                # its owner could complete before the boundary dispatch.
-                # The fork target is the page holding the LAST matched
-                # token (n_tokens // page_size would index one page past
-                # it when the matched tail fills its page exactly, which
-                # multi-page chunk granules make reachable).
-                self.allocator.share([match.tail_src])
-                req.cow_src = match.tail_src
-                req.cow_dst = req.pages[(match.n_tokens - 1)
-                                        // self.pcfg.page_size]
-            if self.prefix_cache is not None:
-                self.prefix_cache.record(match)
-                self.prefix_cache.insert(req.prompt, req.prompt_len,
-                                         req.pages)
-            req.slot = self.free_slots.pop(0)
-            self.running[req.slot] = req
-            self.n_admitted += 1
-            admitted.append(req)
+        """Deficit-round-robin admission across tenant queues.
+
+        Each round every tenant with queued work accrues
+        ``weight x quantum`` pages of deficit and admits queue heads
+        while the deficit covers their marginal (fresh-page) cost and a
+        slot + pages + quota headroom exist.  A blocked head blocks its
+        tenant's queue (no overtaking); rounds continue while someone is
+        deficit-blocked, bounded by ``ResourceManager.max_rounds``.
+        Restored requests come back ``swap is not None`` — the engine
+        runs their swap-in scatter instead of a prefill."""
+        admitted: list[Request] = []
+        if not self.free_slots or not self.rm.has_queued:
+            return admitted
+        order = self.rm.rotation()
+        for _ in range(self.rm.max_rounds()):
+            any_admit = False
+            deficit_blocked = False
+            for st in order:
+                if not st.has_queued:
+                    st.deficit = 0.0      # classic DRR: credit dies idle
+                    continue
+                # cap at the costliest possible admission: a head blocked
+                # on pages for many boundaries must not bank unbounded
+                # credit and later lock out every other tenant
+                st.deficit = min(st.deficit + st.cfg.weight
+                                 * self.rm.quantum,
+                                 float(self.pcfg.allocatable_pages))
+                while self.free_slots and st.has_queued:
+                    req = st.head()
+                    plan = self.rm.plan_admission(req)
+                    if not isinstance(plan, AdmissionPlan):
+                        break             # quota/pool: head holds the line
+                    if plan.cost > st.deficit:
+                        deficit_blocked = True
+                        break
+                    if not self.rm.commit_admission(plan):
+                        break             # optimistic pins freed nothing
+                    st.pop_head()
+                    st.deficit -= plan.cost
+                    req.restore_blocks = plan.restore_blocks
+                    req.slot = self.free_slots.pop(0)
+                    self.running[req.slot] = req
+                    self.n_admitted += 1
+                    admitted.append(req)
+                    any_admit = True
+                if not st.has_queued:
+                    st.deficit = 0.0
+            if not any_admit and not deficit_blocked:
+                break
         return admitted
 
     def finish_boundary(self, admitted: list[Request]) -> None:
-        """Called by the engine after the admission-boundary dispatch:
-        CoW copies have landed (drop the source pins) and the admitted
-        requests' prompt K/V is on device (trie entries become ready)."""
+        """Called by the engine after the boundary dispatches: CoW copies
+        and restore scatters have landed (drop source pins, drop host
+        images) and the admitted requests' K/V is on device (trie entries
+        become ready)."""
         for req in admitted:
             if req.cow_src is not None:
-                self.allocator.release([req.cow_src])
+                self.rm.allocator.release([req.cow_src])
                 req.cow_src = None
+            req.swap = None               # host image no longer needed
         if self.prefix_cache is not None:
             self.prefix_cache.mark_ready()
 
+    def end_segment(self, generated_slots: Iterable[int]) -> None:
+        """Anti-livelock bookkeeping: a request that generated through a
+        full segment loses its protection and becomes preemptable."""
+        for slot in generated_slots:
+            req = self.running.get(slot)
+            if req is not None:
+                req.protected = False
+
     def complete(self, slot: int) -> Request:
-        """Retire the request in ``slot``; pages whose last reference
-        dies are free for the next admission immediately."""
+        """Retire the request in ``slot``.  All page bookkeeping is the
+        allocator's refcounts (ResourceManager.release_request): pages
+        whose last reference dies are free for the very next admission."""
         req = self.running.pop(slot)
-        if req.cow_src is not None:       # engine never ran the boundary
-            self.allocator.release([req.cow_src])
-            req.cow_src = None
-        self.allocator.release(req.pages)
-        req.pages = None
+        self.rm.release_request(req)
         req.slot = None
         self.free_slots.append(slot)
         self.free_slots.sort()
         self.finished.append(req)
         return req
 
-    def stats(self) -> dict[str, int | float]:
-        """Prefix-sharing counters for benches/telemetry."""
-        pc = self.prefix_cache
-        return {
-            "pages_allocated_total": self.allocator.pages_allocated_total,
-            "pages_shared_total": self.allocator.pages_shared_total,
-            "prefix_lookups": pc.lookups if pc else 0,
-            "prefix_hits": pc.hits if pc else 0,
-            "prefix_tokens_matched": pc.tokens_matched if pc else 0,
-        }
+    def stats(self) -> dict[str, Any]:
+        """Resource/prefix counters for benches and telemetry."""
+        return self.rm.stats()

@@ -133,6 +133,11 @@ def derive_problems(handle: DNNHandle, *, batch_m: int = 128,
     - flash_prefill_ragged: the batched admission-prefill dispatch (same
       gate) — TUNE picks the suffix q-tile against the tuned page size,
       which is also the prefix-sharing match granule.
+    - paged_segment: the engine's decode-segment length (same gate) —
+      the scheduler cadence that trades per-token dispatch overhead
+      against boundary reactivity, keyed against the tuned page size.
+      The resource manager's growth granule (pages per segment) follows
+      from it, so both serving-schedule knobs are tuned quantities.
     Largest problems first, capped at ``max_problems``.
     """
     from repro.kernels import autotune
@@ -216,5 +221,13 @@ def derive_problems(handle: DNNHandle, *, batch_m: int = 128,
                 pps, adt)
             sized.append((seq * cache_len * cfg.n_heads,
                           {"kernel": "flash_prefill_ragged", **fprob}))
+            # decode-segment cadence: tuned against the same pool layout
+            # (the page size TUNE selected above); the engine reads the
+            # winner back via paged_cache.preferred_segment_len, and the
+            # resource manager derives its growth granule from it
+            gprob = autotune.paged_segment_problem(
+                db, cfg.n_heads, cfg.n_kv_heads, hd, cache_len, pps, adt)
+            sized.append((seq * cache_len * cfg.n_heads,
+                          {"kernel": "paged_segment", **gprob}))
     sized.sort(key=lambda sp: -sp[0])
     return [p for _, p in sized[:max_problems]]

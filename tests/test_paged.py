@@ -1,6 +1,8 @@
 """Paged KV-cache + continuous batching: allocator, kernel-vs-oracle,
 paged-vs-contiguous token equality, page reuse, scheduler admit/evict,
-prefix-sharing/CoW, and the batched ragged admission prefill."""
+prefix-sharing/CoW, the batched ragged admission prefill, and the
+quota-aware resource manager (growth-on-demand paging, host-swap
+preemption/restore, multi-tenant budgets + DRR, prefix retention)."""
 
 import math
 
@@ -18,8 +20,8 @@ from repro.models import layers as L
 from repro.models.api import build_model
 from repro.serving import (ContinuousBatchingScheduler, PageAllocator,
                            PagedCacheConfig, PagedServingEngine,
-                           PrefixCache, Request, TRASH_PAGE,
-                           init_paged_cache)
+                           PrefixCache, Request, TenantConfig,
+                           TRASH_PAGE, init_paged_cache)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -831,3 +833,424 @@ class TestAdmissionOrdering:
         # 4-token tail of the running owner (20 of its 24 tokens)
         assert stats["prefix_tokens_matched"] >= 20
         assert got == base
+
+
+# ----------------------------------- resource manager: growth on demand
+class TestGrowthOnDemand:
+    def test_admission_backs_one_segment_not_the_lifetime(self):
+        """The old scheduler reserved prompt+max_new+1 at admission; the
+        resource manager backs only prompt + one segment and grows the
+        rest on demand."""
+        pcfg = PagedCacheConfig(page_size=8, n_pages=32, max_slots=4,
+                                max_blocks=5, segment_len=4)
+        sched = ContinuousBatchingScheduler(pcfg)
+        sched.submit(Request(rid=0, prompt=np.zeros(8, np.int32),
+                             max_new_tokens=24))
+        (req,) = sched.try_admit()
+        # coverage: min(8 + 4 + 1, 8 + 24 + 1) = 13 tokens -> 2 pages,
+        # against a 5-page lifetime
+        assert len(req.pages) == 2
+        assert sched.rm.lifetime_pages(req) == 5
+
+    def test_packs_more_concurrent_requests_than_lifetime_reservation(self):
+        """5 requests x 5 lifetime pages = 25 > the 11-page pool, but
+        admission costs only 2 pages each — all five co-reside where
+        whole-lifetime reservation could admit at most two."""
+        pcfg = PagedCacheConfig(page_size=8, n_pages=12, max_slots=5,
+                                max_blocks=5, segment_len=4)
+        sched = ContinuousBatchingScheduler(pcfg)
+        for i in range(5):
+            sched.submit(Request(rid=i, prompt=np.zeros(8, np.int32),
+                                 max_new_tokens=24))
+        assert len(sched.try_admit()) == 5
+
+    def test_growth_happens_and_tokens_match_contiguous(self):
+        """max_new far beyond one segment: pages arrive across several
+        boundaries (pages_grown > 0) and tokens still equal the
+        contiguous reference."""
+        cfg, model, params = _smoke_setup()
+        prompt_len, gen, n = 16, 12, 2
+        prompts = _prompts(cfg, n, prompt_len, seed=17)
+        base = _contiguous_tokens(model, params, prompts, gen)
+        blocks = -(-(prompt_len + gen + 1) // 8)
+        pcfg = PagedCacheConfig(page_size=8, n_pages=n * blocks + 1,
+                                max_slots=n, max_blocks=blocks,
+                                segment_len=2)
+        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=gen)
+                for i in range(n)]
+        stats = PagedServingEngine(model, pcfg).run(reqs, params)
+        assert stats["pages_grown"] > 0
+        assert stats["preemptions"] == 0       # pool fits both lifetimes
+        for r in reqs:
+            assert r.tokens == base[r.rid]
+
+
+# ------------------------------ resource manager: preemption + restore
+class TestPreemptionRestore:
+    def test_oversubscribed_bit_identical_to_unconstrained(self):
+        """Acceptance: total lifetime demand exceeds the pool, at least
+        one preempt/restore cycle runs, every request completes, and
+        per-request tokens are bit-identical to an unconstrained run."""
+        cfg, model, params = _smoke_setup()
+        prompt_len, gen, n = 16, 12, 4
+        prompts = _prompts(cfg, n, prompt_len, seed=23)
+        blocks = -(-(prompt_len + gen + 1) // 8)       # 4-page lifetime
+        big = PagedCacheConfig(page_size=8, n_pages=n * blocks + 1,
+                               max_slots=n, max_blocks=blocks,
+                               segment_len=4)
+        mk = lambda: [Request(rid=i, prompt=prompts[i].copy(),  # noqa
+                              max_new_tokens=gen) for i in range(n)]
+        reqs_u = mk()
+        stats_u = PagedServingEngine(model, big).run(reqs_u, params)
+        assert stats_u["preemptions"] == 0
+        base = {r.rid: list(r.tokens) for r in reqs_u}
+        # pool covers every admission (3 pages each) but not the
+        # lifetimes (4 each): growth must preempt
+        small = PagedCacheConfig(page_size=8, n_pages=n * 3 + 1,
+                                 max_slots=n, max_blocks=blocks,
+                                 segment_len=4)
+        reqs = mk()
+        stats = PagedServingEngine(model, small).run(reqs, params)
+        assert stats["n_finished"] == n
+        assert stats["preemptions"] >= 1
+        assert stats["restores"] == stats["preemptions"]
+        assert stats["pages_swapped_out"] > 0
+        assert {r.rid: list(r.tokens) for r in reqs} == base
+
+    def test_same_boundary_restore_and_fresh_sharer(self):
+        """Regression: a fresh admission that prefix-shares a restore's
+        pages at the SAME boundary must not prefill before the restore's
+        host-image scatter has dispatched — full-chunk trie entries are
+        matchable pre-ready by design, so the engine orders restores
+        first.  Geometry: w1/w2 fill the 3 slots with r; their growth
+        preempts r; both retire at one boundary, freeing slots+pages so
+        r's restore and f's admission (same prompt as r) land together,
+        with f sharing r's freshly re-allocated (scatter-pending) page."""
+        cfg, model, params = _smoke_setup()
+        P = np.asarray(lm_tokens(16, cfg.vocab_size,
+                                 seed=77)).astype(np.int32)
+        fillers = [np.asarray(lm_tokens(16, cfg.vocab_size,
+                                        seed=78 + i)).astype(np.int32)
+                   for i in range(2)]
+        mk = lambda: [  # noqa: E731
+            Request(rid="w1", prompt=fillers[0].copy(), max_new_tokens=8),
+            Request(rid="w2", prompt=fillers[1].copy(), max_new_tokens=8),
+            Request(rid="r", prompt=P.copy(), max_new_tokens=12),
+            Request(rid="f", prompt=P.copy(), max_new_tokens=6)]
+        big = PagedCacheConfig(page_size=8, n_pages=4 * 4 + 1,
+                               max_slots=3, max_blocks=4, segment_len=4)
+        ru = mk()
+        PagedServingEngine(model, big).run(ru, params)
+        base = {r.rid: list(r.tokens) for r in ru}
+        small = PagedCacheConfig(page_size=8, n_pages=10, max_slots=3,
+                                 max_blocks=4, segment_len=4)
+        rs = mk()
+        stats = PagedServingEngine(model, small).run(rs, params)
+        assert stats["preemptions"] >= 1 and stats["restores"] >= 1
+        assert stats["prefix_hits"] >= 1          # f did share r's pages
+        assert {r.rid: list(r.tokens) for r in rs} == base
+
+    def test_victim_policy_skips_protected_and_prefers_newest(self):
+        pcfg = PagedCacheConfig(page_size=8, n_pages=32, max_slots=4,
+                                max_blocks=4, segment_len=4)
+        sched = ContinuousBatchingScheduler(pcfg)
+        for i in range(3):
+            sched.submit(Request(rid=i, prompt=np.zeros(8, np.int32),
+                                 max_new_tokens=4))
+        admitted = sched.try_admit()
+        assert len(admitted) == 3
+        rm = sched.rm
+        # all fresh admissions carry one segment of protection
+        assert rm.pick_victim(sched.running.values(),
+                              exclude=admitted[0]) is None
+        sched.end_segment(r.slot for r in admitted)    # all generated
+        victim = rm.pick_victim(sched.running.values(),
+                                exclude=admitted[0])
+        assert victim is admitted[2]                   # newest first
+        admitted[2].protected = True                   # restored-like
+        victim = rm.pick_victim(sched.running.values(),
+                                exclude=admitted[0])
+        assert victim is admitted[1]
+
+    def test_restore_rematches_resident_prefix_pages(self):
+        """A preempted request whose prompt prefix is still resident
+        (its prefix owner kept running) restores by block-table aliasing
+        for those pages and host swap-in only for the rest."""
+        pcfg = PagedCacheConfig(page_size=8, n_pages=32, max_slots=2,
+                                max_blocks=6, segment_len=4)
+        sched = ContinuousBatchingScheduler(pcfg)
+        prompt = np.arange(16, dtype=np.int32)
+        owner = Request(rid="o", prompt=prompt, max_new_tokens=16)
+        sharer = Request(rid="s", prompt=prompt.copy(), max_new_tokens=16)
+        sched.submit(owner)
+        sched.submit(sharer)
+        admitted = sched.try_admit()
+        assert len(admitted) == 2
+        sched.finish_boundary(admitted)                # trie ready
+        for r, ngen in ((owner, 4), (sharer, 2)):
+            r.tokens = list(range(ngen))               # fake generation
+        sched.end_segment([owner.slot, sharer.slot])
+        owner_page0 = owner.pages[0]
+        sched._preempt(sharer)
+        assert sharer.swap is not None
+        assert sharer.swap.n_tokens == 16 + 2 - 1      # sl = p + n_gen - 1
+        (back,) = sched.try_admit()
+        assert back is sharer
+        # first prompt page re-mapped from the live owner, not swapped in
+        assert back.restore_blocks[0] >= 1
+        assert back.pages[0] == owner_page0
+        assert sched.allocator.refcount(owner_page0) >= 2
+        assert sched.rm.pages_swapped_in < sched.rm.pages_swapped_out
+
+    def test_quota_preemption_stays_inside_the_tenant(self):
+        """A tenant at its budget evicts its own newest request; other
+        tenants' requests are never quota victims."""
+        pcfg = PagedCacheConfig(page_size=8, n_pages=64, max_slots=4,
+                                max_blocks=6, segment_len=4)
+        sched = ContinuousBatchingScheduler(
+            pcfg, tenants=[TenantConfig("a", page_budget=5),
+                           TenantConfig("b", page_budget=48)])
+        reqs = [Request(rid=f"a{i}", prompt=np.zeros(8, np.int32),
+                        max_new_tokens=24, tenant="a") for i in range(2)]
+        other = Request(rid="b0", prompt=np.zeros(8, np.int32),
+                        max_new_tokens=24, tenant="b")
+        for r in [*reqs, other]:
+            sched.submit(r)
+        admitted = sched.try_admit()
+        assert len(admitted) == 3
+        for r in admitted:
+            r.tokens = list(range(6))       # deep enough to need growth
+        sched.end_segment(r.slot for r in admitted)
+        preempted = sched.plan_growth()
+        # tenant a is over budget for its growth: its newest request is
+        # swapped; tenant b grows freely and is never touched
+        assert preempted and all(r.tenant == "a" for r in preempted)
+        assert other in sched.running.values()
+
+
+# --------------------------- resource manager: tenants, DRR, retention
+class TestTenantScheduling:
+    def _mk(self, rid, tenant, max_new=4):
+        return Request(rid=rid, prompt=np.zeros(8, np.int32),
+                       max_new_tokens=max_new, tenant=tenant)
+
+    def test_weighted_drr_admission_split(self):
+        """Three slots, two tenants at weight 2:1 with equal-cost
+        queues: the weight-2 tenant lands two of the three slots."""
+        pcfg = PagedCacheConfig(page_size=8, n_pages=64, max_slots=3,
+                                max_blocks=4, segment_len=4)
+        sched = ContinuousBatchingScheduler(
+            pcfg, tenants=[TenantConfig("a", weight=2.0),
+                           TenantConfig("b", weight=1.0)])
+        for i in range(4):
+            sched.submit(self._mk(f"a{i}", "a"))
+            sched.submit(self._mk(f"b{i}", "b"))
+        admitted = sched.try_admit()
+        assert len(admitted) == 3
+        by_tenant = {t: sum(r.tenant == t for r in admitted)
+                     for t in ("a", "b")}
+        assert by_tenant == {"a": 2, "b": 1}
+
+    def test_budget_blocks_admission_until_pages_refund(self):
+        pcfg = PagedCacheConfig(page_size=8, n_pages=64, max_slots=4,
+                                max_blocks=4, segment_len=8)
+        sched = ContinuousBatchingScheduler(
+            pcfg, tenants=[TenantConfig("a", page_budget=3)])
+        r1, r2 = self._mk("a0", "a", 8), self._mk("a1", "a", 8)
+        sched.submit(r1)
+        sched.submit(r2)
+        admitted = sched.try_admit()   # 3 pages each: budget fits one
+        assert [r.rid for r in admitted] == ["a0"]
+        assert sched.rm.headroom("a") == 0
+        sched.complete(r1.slot)        # refund through release_request
+        assert sched.rm.headroom("a") == 3
+        assert [r.rid for r in sched.try_admit()] == ["a1"]
+
+    def test_lifetime_beyond_budget_rejected_at_submit(self):
+        pcfg = PagedCacheConfig(page_size=8, n_pages=64, max_slots=4,
+                                max_blocks=6)
+        sched = ContinuousBatchingScheduler(
+            pcfg, tenants=[TenantConfig("a", page_budget=2)])
+        with pytest.raises(ValueError):
+            sched.submit(self._mk("a0", "a", max_new=24))  # 5 pages
+
+    def test_unknown_tenant_rejected_when_roster_is_explicit(self):
+        """A typo'd tenant must not auto-register with a whole-pool
+        budget and route around the configured quotas."""
+        pcfg = PagedCacheConfig(page_size=8, n_pages=64, max_slots=4,
+                                max_blocks=4)
+        sched = ContinuousBatchingScheduler(
+            pcfg, tenants=[TenantConfig("a", page_budget=4)])
+        with pytest.raises(ValueError, match="unknown tenant"):
+            sched.submit(self._mk("x0", "a-typo"))
+        # without a roster, any tenant name auto-registers (single-tenant
+        # callers never mention tenants at all)
+        open_sched = ContinuousBatchingScheduler(pcfg)
+        open_sched.submit(self._mk("x0", "whatever"))
+        assert len(open_sched.try_admit()) == 1
+
+    def test_shared_prefix_pages_charge_only_marginal_cost(self):
+        """A sharer whose prompt prefix is resident pays only for its
+        CoW fork + suffix/decode pages — the shared pages never count
+        against its tenant's budget."""
+        pcfg = PagedCacheConfig(page_size=8, n_pages=64, max_slots=4,
+                                max_blocks=6, segment_len=4)
+        sched = ContinuousBatchingScheduler(
+            pcfg, tenants=[TenantConfig("a", page_budget=32),
+                           TenantConfig("b", page_budget=5)])
+        prompt = np.arange(24, dtype=np.int32)
+        owner = Request(rid="o", prompt=prompt, max_new_tokens=8,
+                        tenant="a")
+        sched.submit(owner)
+        sched.finish_boundary(sched.try_admit())
+        owner_charged = owner.charged
+        # sharer: 2 full prompt pages map free of charge — only the CoW
+        # fork page and the fresh suffix/decode page are billed
+        sharer = Request(rid="s", prompt=prompt.copy(), max_new_tokens=8,
+                         tenant="b")
+        sched.submit(sharer)
+        (adm,) = sched.try_admit()
+        assert adm is sharer
+        assert sharer.shared_pages == 2
+        assert sharer.charged == len(sharer.pages) - 2 == 2
+        assert owner.charged == owner_charged  # owner pays for its own
+
+    def test_tenant_stats_schema(self):
+        pcfg = PagedCacheConfig(page_size=8, n_pages=32, max_slots=2,
+                                max_blocks=4)
+        sched = ContinuousBatchingScheduler(
+            pcfg, tenants=[TenantConfig("a")])
+        sched.submit(self._mk("a0", "a"))
+        sched.try_admit()
+        stats = sched.stats()
+        ta = stats["tenants"]["a"]
+        for key in ("admitted", "preempted", "restored", "pages_swapped",
+                    "pages_charged", "page_budget", "queued"):
+            assert key in ta
+        assert ta["admitted"] == 1 and ta["preempted"] == 0
+
+
+class TestPrefixRetention:
+    def test_pins_keep_prefix_alive_past_owner_completion(self):
+        """With retain_pages set, completing the last request holding a
+        prefix does NOT free its full-chunk pages — a later identical
+        prompt still hits the trie."""
+        pcfg = PagedCacheConfig(page_size=8, n_pages=32, max_slots=2,
+                                max_blocks=6, segment_len=4,
+                                retain_pages=2)
+        sched = ContinuousBatchingScheduler(pcfg)
+        prompt = np.arange(24, dtype=np.int32)
+        req = Request(rid=0, prompt=prompt, max_new_tokens=4)
+        sched.submit(req)
+        sched.finish_boundary(sched.try_admit())   # pins the 2 full pages
+        assert sched.prefix_cache.pinned_pages == 2
+        pinned = req.pages[:2]
+        sched.complete(req.slot)
+        # pinned pages survive the owner's completion at refcount 1
+        assert all(sched.allocator.refcount(p) == 1 for p in pinned)
+        late = Request(rid=1, prompt=prompt.copy(), max_new_tokens=4)
+        sched.submit(late)
+        (adm,) = sched.try_admit()
+        assert adm.shared_pages == 2
+        assert adm.pages[:2] == pinned
+
+    def test_pins_evict_under_allocator_pressure(self):
+        """Retention never wins against a request's demand: an admission
+        that needs the pinned pages gets them."""
+        # 5 allocatable pages, 2 of them pinned after the owner leaves
+        pcfg = PagedCacheConfig(page_size=8, n_pages=6, max_slots=2,
+                                max_blocks=5, segment_len=8,
+                                retain_pages=2)
+        sched = ContinuousBatchingScheduler(pcfg)
+        req = Request(rid=0, prompt=np.arange(24, dtype=np.int32),
+                      max_new_tokens=8)
+        sched.submit(req)
+        sched.finish_boundary(sched.try_admit())
+        sched.complete(req.slot)
+        assert sched.prefix_cache.pinned_pages == 2
+        assert sched.allocator.n_free == 3
+        # unrelated request needing 5 pages: pins must yield
+        big = Request(rid=1, prompt=100 + np.arange(24, dtype=np.int32),
+                      max_new_tokens=8)
+        sched.submit(big)
+        (adm,) = sched.try_admit()
+        assert adm is big and len(adm.pages) == 5
+        assert sched.prefix_cache.pin_evictions >= 2
+        assert sched.stats()["pin_evictions"] >= 2
+
+    def test_pin_budget_is_lru_capped(self):
+        pcfg = PagedCacheConfig(page_size=8, n_pages=64, max_slots=4,
+                                max_blocks=6, segment_len=4,
+                                retain_pages=3)
+        sched = ContinuousBatchingScheduler(pcfg)
+        for i in range(3):
+            prompt = (100 * i + np.arange(24)).astype(np.int32)
+            r = Request(rid=i, prompt=prompt, max_new_tokens=4)
+            sched.submit(r)
+            sched.finish_boundary(sched.try_admit())
+            sched.complete(r.slot)
+        pc = sched.prefix_cache
+        assert pc.pinned_pages == 3          # capped, LRU evicted
+        assert pc.pin_evictions == 6         # 9 candidate pins, 3 kept
+
+
+# -------------------------------------------- segment-length autotuning
+class TestSegmentAutotune:
+    def test_registered_and_tunable(self, tmp_path):
+        from repro.kernels import autotune
+        prob = autotune.paged_segment_problem(2, 4, 2, 8, 24, 8,
+                                              "float32")
+        cands = autotune.enumerate_candidates("paged_segment", prob)
+        assert {"segment_len": 8} in [c for c, _ in cands]   # default
+        res = autotune.tune("paged_segment", prob,
+                            cache_path=str(tmp_path / "c.json"), iters=1)
+        assert res.config["segment_len"] >= 1
+        again = autotune.tune("paged_segment", prob,
+                              cache_path=str(tmp_path / "c.json"),
+                              iters=1)
+        assert again.cached and again.config == res.config
+
+    def test_tune_task_derives_segment_problem(self):
+        from repro.tasks.tune import derive_problems
+        from repro.tasks.handle import DNNHandle
+        cfg = get_config("qwen2_7b", smoke=True)
+        model = build_model(cfg)
+        handle = DNNHandle(kind="lm", name="m",
+                           params=model.init(KEY), model=model)
+        kernels = [p["kernel"]
+                   for p in derive_problems(handle, max_problems=16)]
+        assert "paged_segment" in kernels
+        wcfg = get_config("h2o_danube_3_4b", smoke=True)   # windowed
+        wmodel = build_model(wcfg)
+        whandle = DNNHandle(kind="lm", name="w",
+                            params=wmodel.init(KEY), model=wmodel)
+        wkernels = [p["kernel"]
+                    for p in derive_problems(whandle, max_problems=16)]
+        assert "paged_segment" not in wkernels
+
+    def test_preferred_segment_len_readback(self, tmp_path, monkeypatch):
+        from repro.kernels import autotune
+        from repro.serving.paged_cache import preferred_segment_len
+        cache = str(tmp_path / "autotune.json")
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", cache)
+        autotune.clear_memory_cache()
+        cfg = get_config("qwen2_7b", smoke=True)
+        # cold cache: the kernel default stands in
+        assert preferred_segment_len(cfg, 4, 48) == 8
+        # a persisted winner (keyed on the tuned page size) is read back
+        prob = autotune.paged_segment_problem(
+            4, cfg.n_heads, cfg.n_kv_heads, cfg.hd, 48, 16,
+            str(cfg.adt))
+        autotune._store(cache, autotune.cache_key("paged_segment", prob),
+                        {"config": {"segment_len": 16}, "us": 1.0,
+                         "n_trials": 5, "iters": 3,
+                         "backend": jax.default_backend(), "t": 0.0})
+        autotune.clear_memory_cache()
+        assert preferred_segment_len(cfg, 4, 48) == 16
+        autotune.clear_memory_cache()
+
+    def test_growth_granule_follows_segment_len(self):
+        pcfg = PagedCacheConfig(page_size=8, segment_len=12)
+        assert pcfg.growth_granule == 2      # pages_for(12)
+        assert PagedCacheConfig(page_size=8, segment_len=12,
+                                growth_pages=3).growth_granule == 3

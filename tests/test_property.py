@@ -13,6 +13,8 @@ from repro.models.common import apply_rope
 from repro.optim.compression import compress_with_feedback
 from repro.quant.policy import (INT8, LEVELS, PrecisionPolicy, cast_level,
                                 quantize_int8)
+from repro.serving import (ContinuousBatchingScheduler, PagedCacheConfig,
+                           Request, TenantConfig)
 from repro.serving.paged_cache import PageAllocator
 from repro.sparsity.masks import (apply_masks, block_mask, magnitude_mask,
                                   sparsity_report)
@@ -160,6 +162,156 @@ def test_page_allocator_interleavings_never_leak(n_pages, data):
     assert alloc.n_free == total     # full drain: every page came back
     with pytest.raises(ValueError):  # and nothing double-frees
         alloc.release([1])
+
+
+# ----------------------- resource manager: multi-tenant state machine
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_resource_manager_interleavings(data):
+    """Random submit / grow / preempt / restore / complete interleavings
+    across 2-3 tenants, driven through the scheduler's real boundary
+    protocol with simulated generation (no model): pages never leak,
+    tenant charges never exceed budgets, running coverage always backs
+    the resident tokens, and every request — preempted or not — finishes.
+    """
+    ps = 4
+    n_tenants = data.draw(st.integers(2, 3), label="n_tenants")
+    tenants = [TenantConfig(f"t{i}",
+                            weight=float(data.draw(
+                                st.sampled_from([1, 2]), label=f"w{i}")),
+                            page_budget=data.draw(
+                                st.sampled_from([None, 4, 6, 8]),
+                                label=f"b{i}"))
+               for i in range(n_tenants)]
+    pcfg = PagedCacheConfig(
+        page_size=ps,
+        n_pages=data.draw(st.integers(9, 25), label="n_pages"),
+        max_slots=data.draw(st.integers(2, 4), label="slots"),
+        max_blocks=4, segment_len=data.draw(st.integers(2, 4),
+                                            label="seg"),
+        retain_pages=data.draw(st.sampled_from([0, 2]), label="retain"))
+    sched = ContinuousBatchingScheduler(pcfg, tenants=tenants)
+    total = pcfg.allocatable_pages
+    submitted: list[Request] = []
+    rid = 0
+
+    def check_invariants():
+        # no page leaked or double-counted
+        assert sched.allocator.n_free + sched.allocator.n_held == total
+        # quota: charges within budget, and they sum consistently
+        for t in tenants:
+            st_ = sched.rm.state(t.name)
+            assert 0 <= st_.charged <= sched.rm.budget(t.name)
+        live_charge = sum(r.charged for r in sched.running.values())
+        assert live_charge == sum(sched.rm.state(t.name).charged
+                                  for t in tenants)
+        for r in sched.running.values():
+            # coverage: resident tokens always inside owned pages
+            resident = r.prompt_len + max(0, len(r.tokens) - 1)
+            assert len(r.pages) * ps >= resident
+            assert r.swap is None
+
+    def boundary():
+        for slot, r in list(sched.running.items()):
+            if len(r.tokens) >= r.max_new_tokens:
+                sched.complete(slot)
+        preempted = sched.plan_growth()
+        for r in preempted:              # the engine would device_get here
+            assert r.swap is not None and r.swap.pages
+        admitted = sched.try_admit()
+        for r in admitted:
+            if r.swap is None and not r.tokens:
+                r.tokens = [7]           # simulated prefill first token
+        sched.finish_boundary(admitted)
+        generated = []
+        for slot, r in sched.running.items():
+            if not r.stalled and len(r.tokens) < r.max_new_tokens:
+                k = min(pcfg.segment_len,
+                        r.max_new_tokens - len(r.tokens))
+                r.tokens.extend([7] * k)
+                generated.append(slot)
+        sched.end_segment(generated)
+        check_invariants()
+
+    for _ in range(data.draw(st.integers(1, 25), label="n_ops")):
+        op = data.draw(st.sampled_from(["submit", "boundary"]), label="op")
+        if op == "submit":
+            t = data.draw(st.sampled_from(tenants), label="tenant")
+            plen = data.draw(st.integers(2, 8), label="plen")
+            mnew = data.draw(st.integers(1, 6), label="mnew")
+            req = Request(rid=rid, tenant=t.name,
+                          prompt=np.arange(plen, dtype=np.int32)
+                          % max(plen - 1, 1),
+                          max_new_tokens=mnew)
+            rid += 1
+            need = pcfg.pages_for(plen + mnew + 1)
+            if need > sched.rm.budget(t.name):
+                with pytest.raises(ValueError):
+                    sched.submit(req)
+                continue
+            sched.submit(req)
+            submitted.append(req)
+        else:
+            boundary()
+
+    # drain: every request — including preempted ones — must finish
+    for _ in range(400):
+        if not sched.has_work:
+            break
+        boundary()
+    assert not sched.has_work
+    assert len(sched.finished) == len(submitted)
+    for r in submitted:
+        assert len(r.tokens) == r.max_new_tokens
+    # releasing the retention pins drains the pool completely
+    if sched.prefix_cache is not None:
+        sched.prefix_cache.release_pins(total)
+    assert sched.allocator.n_free == total
+
+
+_SERVE = {}     # compile cache: one model + one engine per (seg, pool)
+
+
+def _serve_engine(seg: int, n_pages: int):
+    if "model" not in _SERVE:
+        from repro.configs.registry import get_config
+        from repro.models.api import build_model
+        cfg = get_config("qwen2_7b", smoke=True)
+        model = build_model(cfg)
+        _SERVE["model"] = (cfg, model, model.init(jax.random.PRNGKey(0)))
+    cfg, model, params = _SERVE["model"]
+    key = (seg, n_pages)
+    if key not in _SERVE:
+        from repro.serving import PagedCacheConfig, PagedServingEngine
+        pcfg = PagedCacheConfig(page_size=8, n_pages=n_pages,
+                                max_slots=2, max_blocks=4,
+                                segment_len=seg)
+        _SERVE[key] = PagedServingEngine(model, pcfg)
+    return cfg, params, _SERVE[key]
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.lists(st.integers(2, 12), min_size=2, max_size=4),
+       st.sampled_from([2, 4]))
+def test_engine_preemption_tokens_bit_identical(gens, seg):
+    """Random ragged generation lengths through a pool too small for the
+    batch's lifetimes (preempt/restore cycles on most draws) generate
+    exactly the tokens of an unconstrained big-pool run, and every
+    request finishes."""
+    from repro.data.synthetic import lm_tokens
+    from repro.serving import Request
+    cfg, params, small = _serve_engine(seg, 7)   # 6 pages: lifetimes clash
+    _, _, big = _serve_engine(seg, 9)            # 8 pages: fits everything
+    prompts = [np.asarray(lm_tokens(16, cfg.vocab_size, seed=40 + i)
+                          ).astype(np.int32) for i in range(len(gens))]
+    mk = lambda: [Request(rid=i, prompt=prompts[i].copy(),  # noqa
+                          max_new_tokens=g) for i, g in enumerate(gens)]
+    ru, rs = mk(), mk()
+    stats_u = big.run(ru, params)
+    stats_s = small.run(rs, params)
+    assert stats_u["preemptions"] == 0
+    assert stats_s["n_finished"] == len(gens)
+    assert {r.rid: r.tokens for r in rs} == {r.rid: r.tokens for r in ru}
 
 
 # ---------------------------------------------------- binary search props
