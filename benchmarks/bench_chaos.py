@@ -1,0 +1,65 @@
+"""Chaos smoke suite: the self-healing serving row, standalone.
+
+Runs only ``bench_serve._bench_chaos`` — the undersized paged engine
+once fault-free and once under a fixed-seed FaultPlan (injected
+allocation failure + poisoned decode segment) — so CI can gate the
+recovery layer's contract without paying for the full serving suite.
+Gates: every request finishes with tokens bit-identical to the
+fault-free run, nothing dead-letters under the default retry policy,
+and the healing wall overhead stays within ``CHAOS_OVERHEAD_MAX``.
+Results land in ``benchmarks/results/chaos_bench.json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+try:
+    from benchmarks.bench_serve import (CHAOS_OVERHEAD_MAX, LOAD_ARCH,
+                                        _bench_chaos)
+    from benchmarks.common import emit, save_json
+except ImportError:
+    from bench_serve import CHAOS_OVERHEAD_MAX, LOAD_ARCH, _bench_chaos
+    from common import emit, save_json
+
+
+def main():
+    from repro.configs.registry import get_config
+    from repro.models.api import build_model
+
+    cfg = get_config(LOAD_ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    row = _bench_chaos(cfg, model, params)
+    results = {"backend": jax.default_backend(), "t": time.time(),
+               "chaos": row}
+    emit("serve_load_chaos", row["wall_chaos_s"] * 1e6,
+         f"overhead={row['chaos_overhead']:.2f}x;"
+         f"faults_fired={row['faults_fired']};"
+         f"quarantines={row['recovery']['quarantines']};"
+         f"dead_lettered={row['dead_lettered']};"
+         f"tokens_equal={int(row['tokens_equal'])}")
+    save_json("chaos_bench.json", results)
+    if not (row["tokens_equal"] and row["all_finished"]
+            and row["faults_fired"] >= 2):
+        raise SystemExit(
+            "chaos smoke failed: with an injected allocation failure and "
+            "a poisoned decode segment, every request must still finish "
+            "with tokens bit-identical to the fault-free run (see "
+            "benchmarks/results/chaos_bench.json)")
+    if row["dead_lettered"]:
+        raise SystemExit("chaos smoke failed: the default retry policy "
+                         "must absorb the fixed-seed plan without "
+                         "dead-lettering any request")
+    if row["chaos_overhead"] > CHAOS_OVERHEAD_MAX:
+        raise SystemExit(
+            "chaos smoke failed: self-healing wall overhead "
+            f"{row['chaos_overhead']:.2f}x exceeded "
+            f"{CHAOS_OVERHEAD_MAX}x the fault-free run")
+    return results
+
+
+if __name__ == "__main__":
+    main()

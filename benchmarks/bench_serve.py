@@ -58,6 +58,13 @@ Two resource-manager rows exercise the quota-aware preemptive scheduler
   cycle.  Gated: every request completes, >= 1 preemption actually
   happened, and per-request tokens are bit-identical to an
   unconstrained big-pool run.
+
+A chaos row (``_bench_chaos``, also runnable alone via
+``benchmarks/bench_chaos.py`` — the CI chaos smoke) replays the
+undersized geometry under a fixed-seed FaultPlan (an injected
+allocation failure + a poisoned decode segment) and gates the recovery
+layer's contract: every request finishes token-identical to the
+fault-free run within a bounded wall-overhead multiple.
 """
 
 from __future__ import annotations
@@ -321,6 +328,14 @@ def _bench_load() -> dict:
     suite["verdict"]["oversubscribed_tokens_equal"] = \
         orow["tokens_equal"] and orow["preemptions"] >= 1 \
         and orow["all_finished"]
+
+    suite["rows"].append(_bench_chaos(cfg, model, params))
+    crow = suite["rows"][-1]
+    suite["verdict"]["chaos_tokens_equal"] = \
+        crow["tokens_equal"] and crow["all_finished"] \
+        and crow["faults_fired"] >= 2
+    suite["verdict"]["chaos_overhead_bounded"] = \
+        crow["chaos_overhead"] <= CHAOS_OVERHEAD_MAX
     return suite
 
 
@@ -480,6 +495,74 @@ def _bench_oversubscribed(cfg, model, params) -> dict:
     }
 
 
+# Chaos row: the self-healing acceptance measurement.  The same
+# undersized geometry as the oversubscribed row runs once fault-free and
+# once under a fixed-seed FaultPlan that injects an allocation failure
+# and a poisoned decode segment (NaN logits) mid-run.  The gates are the
+# recovery layer's contract (serving/recovery.py): every request still
+# finishes with tokens bit-identical to the fault-free run, nothing
+# dead-letters under the default retry policy, and the wall cost of
+# healing (rollback + backoff + restore) stays within a bounded multiple
+# of the clean run.
+CHAOS_OVERHEAD_MAX = 5.0
+
+
+def _bench_chaos(cfg, model, params) -> dict:
+    from repro.serving import (FaultPlan, PagedCacheConfig,
+                               PagedServingEngine)
+    from repro.serving.paged_cache import (preferred_page_size,
+                                           preferred_segment_len)
+
+    cap_tokens = LOAD_PROMPT + LOAD_GEN + 1
+    page_size = preferred_page_size(cfg, OS_N, cap_tokens)
+    segment_len = preferred_segment_len(cfg, OS_N, cap_tokens)
+    blocks = -(-cap_tokens // page_size)
+    admit_blocks = -(-min(LOAD_PROMPT + segment_len + 1, cap_tokens)
+                     // page_size)
+    if admit_blocks >= blocks:
+        admit_blocks = blocks - 1
+    pcfg = PagedCacheConfig(page_size=page_size,
+                            n_pages=OS_N * admit_blocks + 1,
+                            max_slots=OS_N, max_blocks=blocks,
+                            segment_len=segment_len)
+    engine = PagedServingEngine(model, pcfg)
+    # a FaultPlan is stateful (opportunity counters), so each run gets a
+    # fresh copy of the same schedule — that IS the reproducibility
+    mk_plan = lambda: FaultPlan.at(alloc=1, decode_poison=1)  # noqa: E731
+    engine.run(_load_requests(cfg, OS_N, seed=5), params)     # warm
+    engine.run(_load_requests(cfg, OS_N, seed=5), params,
+               faults=mk_plan())        # warm the recovery path shapes
+
+    best_c = best_f = None
+    tok_c = tok_f = stats_f = None
+    for _ in range(ITERS):
+        rc = _load_requests(cfg, OS_N, seed=5)
+        sc = engine.run(rc, params)
+        if best_c is None or sc["wall_s"] < best_c:
+            best_c, tok_c = sc["wall_s"], {r.rid: list(r.tokens)
+                                           for r in rc}
+        rf = _load_requests(cfg, OS_N, seed=5)
+        sf = engine.run(rf, params, faults=mk_plan())
+        if best_f is None or sf["wall_s"] < best_f:
+            best_f, tok_f, stats_f = sf["wall_s"], \
+                {r.rid: list(r.tokens) for r in rf}, sf
+    return {
+        "load": "chaos",
+        "prompt_len": LOAD_PROMPT, "gen": LOAD_GEN,
+        "page_size": page_size, "segment_len": segment_len,
+        "pool_pages": OS_N * admit_blocks,
+        "wall_clean_s": best_c,
+        "wall_chaos_s": best_f,
+        "chaos_overhead": best_f / max(best_c, 1e-9),
+        "faults_fired": len(stats_f["faults"]["fired"]),
+        "faults": stats_f["faults"],
+        "recovery": stats_f["recovery"],
+        "all_finished": stats_f["n_finished"] == OS_N,
+        "dead_lettered": stats_f["n_dead_lettered"],
+        "tokens_equal": tok_f == tok_c,
+    }
+
+
 # Shared-prefix admission row geometry: a system prompt worth several
 # pages plus a short distinct user suffix per request — the workload the
 # prefix cache exists for.  The prefix is aligned down to whole pages of
@@ -629,6 +712,13 @@ def main():
                  f"preemptions={r['preemptions']};"
                  f"pages_swapped={r['pages_swapped_out']};"
                  f"tokens_equal={int(r['tokens_equal'])}")
+        elif r["load"] == "chaos":
+            emit("serve_load_chaos", r["wall_chaos_s"] * 1e6,
+                 f"overhead={r['chaos_overhead']:.2f}x;"
+                 f"faults_fired={r['faults_fired']};"
+                 f"quarantines={r['recovery']['quarantines']};"
+                 f"dead_lettered={r['dead_lettered']};"
+                 f"tokens_equal={int(r['tokens_equal'])}")
         else:
             emit(f"serve_load_{r['load']}_{r['path']}",
                  r["wall_s"] * 1e6,
@@ -680,6 +770,17 @@ def main():
             "oversubscribed row failed: requests must all finish with "
             ">= 1 preempt/restore cycle and tokens bit-identical to the "
             "unconstrained run (see serve_bench.json oversubscribed row)")
+    if not verdict["chaos_tokens_equal"]:
+        raise SystemExit(
+            "chaos row failed: with an injected allocation failure and a "
+            "poisoned decode segment, every request must still finish "
+            "with tokens bit-identical to the fault-free run (see "
+            "serve_bench.json chaos row)")
+    if not verdict["chaos_overhead_bounded"]:
+        raise SystemExit(
+            "chaos row failed: self-healing wall overhead exceeded "
+            f"{CHAOS_OVERHEAD_MAX}x the fault-free run (see "
+            "serve_bench.json chaos row)")
     if not (verdict["tenant_p95_isolated"]
             and verdict["tenant_svc_never_preempted"]):
         raise SystemExit(

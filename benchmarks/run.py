@@ -8,12 +8,15 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_roofline -> §Roofline rows from the dry-run sweeps
   bench_serve    -> serving trajectory (prefill/decode tok/s; scan'd
                     flash-decode vs the seed Python-loop jnp path)
+  bench_chaos    -> self-healing smoke (fixed-seed fault injection
+                    through the paged engine; token-identity gated)
 
 Usage: ``python benchmarks/run.py [suite ...]`` where suite is any of
-pruning/combined/table2/kernels/roofline/serve (default: all).  CI runs
-``run.py kernels`` and ``run.py serve`` as the smoke suites; the kernel
-autotuner persists its tile cache at $REPRO_AUTOTUNE_CACHE so warm runs
-skip the tile search.
+pruning/combined/table2/kernels/roofline/serve/chaos (default: all but
+chaos, whose row already rides inside serve).  CI runs ``run.py
+kernels``, ``run.py serve`` and ``run.py chaos`` as the smoke suites;
+the kernel autotuner persists its tile cache at $REPRO_AUTOTUNE_CACHE
+so warm runs skip the tile search.
 """
 import sys
 
@@ -21,12 +24,16 @@ import sys
 def main(argv: list[str] | None = None) -> None:
     if "benchmarks" not in sys.modules:
         sys.path.insert(0, __file__.rsplit("/", 2)[0])
-    from benchmarks import (bench_combined, bench_kernels, bench_pruning,
-                            bench_roofline, bench_serve, bench_table2)
+    from benchmarks import (bench_chaos, bench_combined, bench_kernels,
+                            bench_pruning, bench_roofline, bench_serve,
+                            bench_table2)
     suites = {"pruning": bench_pruning, "combined": bench_combined,
               "table2": bench_table2, "kernels": bench_kernels,
-              "roofline": bench_roofline, "serve": bench_serve}
-    picked = argv if argv else list(suites)
+              "roofline": bench_roofline, "serve": bench_serve,
+              "chaos": bench_chaos}
+    # the chaos row already rides inside the serve suite: running both by
+    # default would pay for the engine build twice
+    picked = argv if argv else [s for s in suites if s != "chaos"]
     unknown = [s for s in picked if s not in suites]
     if unknown:
         raise SystemExit(f"unknown suite(s) {unknown}; have {list(suites)}")

@@ -19,20 +19,38 @@ under a quota-aware preemptive resource manager.
   scan segments; at segment boundaries it grows block tables, swaps
   preempted requests' pages to host memory, and restores them later in
   a single scatter dispatch (prefix-trie re-match first).
+- faults: deterministic seed-driven fault injection (FaultPlan) over
+  named sites threaded through the allocator, the swap path, and the
+  engine's boundary dispatches — reproducible chaos for tests and CI.
+- recovery: request-level self-healing — boundary checkpoints, fault
+  quarantine with bounded retries and exponential segment backoff,
+  swap-image checksums, an opt-in boundary invariant checker, load
+  shedding with typed RequestFailed dead-letter records, and the
+  EngineStalledError watchdog with its diagnostic snapshot.
 """
 
-from repro.serving.paged_cache import (PageAllocator, PagedCacheConfig,
-                                       PrefixCache, PrefixMatch,
-                                       TRASH_PAGE, init_paged_cache,
+from repro.serving.paged_cache import (AllocatorError, PageAllocator,
+                                       PagedCacheConfig, PrefixCache,
+                                       PrefixMatch, TRASH_PAGE,
+                                       init_paged_cache,
                                        preferred_page_size)
+from repro.serving.faults import (FAULT_SITES, FaultPlan, FaultSpec,
+                                  InjectedFault)
+from repro.serving.recovery import (EngineStalledError, RecoveryManager,
+                                    RecoveryPolicy, RequestFailed,
+                                    diagnostic_snapshot)
 from repro.serving.resources import (DEFAULT_TENANT, ResourceManager,
                                      SwapState, TenantConfig)
 from repro.serving.scheduler import ContinuousBatchingScheduler, Request
 from repro.serving.engine import PagedServingEngine
 
 __all__ = [
-    "PageAllocator", "PagedCacheConfig", "PrefixCache", "PrefixMatch",
-    "TRASH_PAGE", "init_paged_cache", "preferred_page_size",
+    "AllocatorError", "PageAllocator", "PagedCacheConfig", "PrefixCache",
+    "PrefixMatch", "TRASH_PAGE", "init_paged_cache",
+    "preferred_page_size",
+    "FAULT_SITES", "FaultPlan", "FaultSpec", "InjectedFault",
+    "EngineStalledError", "RecoveryManager", "RecoveryPolicy",
+    "RequestFailed", "diagnostic_snapshot",
     "DEFAULT_TENANT", "ResourceManager", "SwapState", "TenantConfig",
     "ContinuousBatchingScheduler", "Request", "PagedServingEngine",
 ]

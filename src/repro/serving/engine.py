@@ -57,8 +57,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.paged_cache import (PagedCacheConfig, TRASH_PAGE,
-                                       init_paged_cache, supports_paging)
+from repro.serving.faults import (FaultPlan, InjectedFault, corrupt_image,
+                                  image_checksum)
+from repro.serving.paged_cache import (AllocatorError, PagedCacheConfig,
+                                       TRASH_PAGE, init_paged_cache,
+                                       supports_paging)
+from repro.serving.recovery import (EngineStalledError, RecoveryManager,
+                                    RecoveryPolicy, diagnostic_snapshot)
 from repro.serving.resources import DEFAULT_TENANT
 from repro.serving.scheduler import ContinuousBatchingScheduler, Request
 
@@ -66,7 +71,8 @@ from repro.serving.scheduler import ContinuousBatchingScheduler, Request
 class PagedServingEngine:
     def __init__(self, model, pcfg: PagedCacheConfig,
                  cache_dtype=jnp.bfloat16, prefill_mode: str = "batched",
-                 tenants=None):
+                 tenants=None, faults: FaultPlan | None = None,
+                 recovery: RecoveryPolicy | None = None):
         if not supports_paging(model.cfg):
             raise ValueError(f"{model.cfg.name} does not support the "
                              f"paged decode path")
@@ -77,6 +83,11 @@ class PagedServingEngine:
         self.cache_dtype = cache_dtype
         self.prefill_mode = prefill_mode
         self.tenants = list(tenants) if tenants is not None else None
+        # fault/recovery defaults for run(); run(faults=..., recovery=...)
+        # overrides per call so one compiled engine serves both the
+        # fault-free baseline and its chaos replays
+        self.faults = faults
+        self.recovery = recovery
         # prefix sharing needs the ragged suffix prefill: the serial
         # batch-1 path always computes (and would re-store) whole prompts
         self.sharing = pcfg.enable_prefix_sharing and \
@@ -135,29 +146,49 @@ class PagedServingEngine:
         tok = jnp.argmax(sel, axis=-1).astype(jnp.int32)
         return tok[:, None], cache["blocks"]
 
-    def _segment_impl(self, params, cache, tok, active, n_gen, max_new):
+    def _segment_impl(self, params, cache, tok, active, n_gen, max_new,
+                      poison):
         """``segment_len`` decode steps as one fused scan dispatch.
 
         Inactive slots still run (the batch is dense) but their tokens are
         masked, their seq_lens hold, and their writes land on pages they
         still own or on the scratch page — never on a reclaimed page.
+
+        ``poison`` is the decode_poison fault payload: a (R,) float added
+        to the first step's logits (all-zero in normal operation, NaN on
+        one slot in a chaos run — adding 0.0 is exact, so the fault-free
+        graph computes bit-identical tokens).  Whatever the source —
+        injection or a real numerics bug — a non-finite last-position
+        logit row latches that slot's ``poisoned`` flag in-graph: the
+        slot stops emitting and advancing for the rest of the segment
+        (its garbage stays beyond the boundary checkpoint's watermark)
+        and the host quarantines it at the boundary.  Healthy slots run
+        on unaffected.
         """
         def step(carry, _):
-            cache, tok, active, n_gen = carry
+            cache, tok, active, n_gen, poison, poisoned = carry
             logits, cache = self.model.decode_step(params, cache, tok)
+            logits = logits + poison.astype(logits.dtype)[:, None, None]
+            bad = ~jnp.all(jnp.isfinite(logits[:, -1]), axis=-1)
+            poisoned = poisoned | bad
+            ok = active & ~poisoned
             nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-            nxt = jnp.where(active[:, None], nxt, 0)
-            emitted = active
-            live = active.astype(jnp.int32)
+            nxt = jnp.where(ok[:, None], nxt, 0)
+            emitted = ok
+            live = ok.astype(jnp.int32)
             n_gen = n_gen + live
             cache = dict(cache, seq_lens=cache["seq_lens"] + live)
-            active = active & (n_gen < max_new)
-            return (cache, nxt, active, n_gen), (nxt[:, 0], emitted)
+            active = active & ~poisoned & (n_gen < max_new)
+            poison = jnp.zeros_like(poison)   # first step only
+            return (cache, nxt, active, n_gen, poison, poisoned), \
+                (nxt[:, 0], emitted)
 
-        (cache, tok, active, n_gen), (toks, emits) = jax.lax.scan(
-            step, (cache, tok, active, n_gen), None,
-            length=self.pcfg.segment_len)
-        return cache, tok, active, n_gen, toks, emits
+        poisoned0 = jnp.zeros_like(active)
+        (cache, tok, active, n_gen, _, poisoned), (toks, emits) = \
+            jax.lax.scan(step,
+                         (cache, tok, active, n_gen, poison, poisoned0),
+                         None, length=self.pcfg.segment_len)
+        return cache, tok, active, n_gen, toks, emits, poisoned
 
     # --------------------------------------------------------- host loop
     def _admit_serial(self, cache, bt, req, params):
@@ -173,7 +204,7 @@ class PagedServingEngine:
         bt[req.slot, :len(req.pages)] = req.pages
         return cache, int(np.asarray(tok1)[0, 0])
 
-    def _admit_batched(self, cache, bt, admitted, params):
+    def _admit_batched(self, cache, bt, admitted, params, faults=None):
         """Batched ragged admission: one dispatch per suffix bucket.
 
         Rows of a dispatch are the admissions themselves (compact — idle
@@ -193,12 +224,20 @@ class PagedServingEngine:
         is split into a later *wave* by ``_admission_waves``, so its
         dispatch runs after the owner's.
 
-        Returns {slot: first greedy token}.
+        Returns ``(cache, {slot: first greedy token}, n_dispatches,
+        failed)`` where ``failed`` lists admissions whose dispatch was
+        killed by an injected ``dispatch_admit`` fault.  A fault aborts
+        the *rest of the boundary* conservatively: later dispatches may
+        prefix-share pages the faulted dispatch was supposed to write
+        (the wave order guarantees dependencies point strictly to
+        earlier dispatches, so everything already dispatched is sound).
         """
         pcfg = self.pcfg
         bucket = max(1, pcfg.prefill_bucket)
         tok_by_slot: dict[int, int] = {}
         n_dispatches = 0
+        failed: list = []
+        aborted = False
         for req in admitted:
             bt[req.slot] = TRASH_PAGE
             bt[req.slot, :len(req.pages)] = req.pages
@@ -207,11 +246,21 @@ class PagedServingEngine:
             for req, s_pad in wave:
                 groups.setdefault(s_pad, []).append(req)
             for s_pad, reqs in sorted(groups.items(), reverse=True):
-                toks, cache = self._dispatch_admissions(cache, bt, reqs,
-                                                        s_pad, params)
+                if aborted:
+                    failed.extend(reqs)
+                    continue
+                try:
+                    if faults is not None:
+                        faults.gate("dispatch_admit")
+                    toks, cache = self._dispatch_admissions(
+                        cache, bt, reqs, s_pad, params)
+                except InjectedFault:
+                    aborted = True
+                    failed.extend(reqs)
+                    continue
                 tok_by_slot.update(toks)
                 n_dispatches += 1
-        return cache, tok_by_slot, n_dispatches
+        return cache, tok_by_slot, n_dispatches, failed
 
     def _admission_waves(self, admitted, bucket):
         """Partition a boundary's admissions (FIFO order) into waves such
@@ -269,14 +318,26 @@ class PagedServingEngine:
         return ({req.slot: int(tok1[i, 0]) for i, req in enumerate(reqs)},
                 dict(cache, blocks=blocks))
 
-    def _swap_out(self, cache, swap) -> None:
+    def _swap_out(self, cache, swap, faults=None) -> None:
         """Pull a preempted request's pages back to host memory.  Must
         run before any subsequent dispatch: the pages are already on the
         free list, and the next admission/restore may overwrite them —
-        the device data is only guaranteed intact until then."""
+        the device data is only guaranteed intact until then.
+
+        The image's CRC is recorded the moment it lands on host, so any
+        later corruption or loss (real, or the swap_corrupt/swap_loss
+        fault sites below) is caught by the recovery layer's one-time
+        verification before a restore of the image is ever planned."""
         idx = jnp.asarray(np.asarray(swap.pages, np.int32))
         swap.host_k = np.asarray(cache["blocks"]["k_pages"][:, idx])
         swap.host_v = np.asarray(cache["blocks"]["v_pages"][:, idx])
+        swap.checksum = image_checksum(swap.host_k, swap.host_v)
+        swap.verified = False
+        if faults is not None:
+            if faults.should_fire("swap_corrupt"):
+                swap.host_k = corrupt_image(swap.host_k)
+            if faults.should_fire("swap_loss"):
+                swap.host_k = swap.host_v = None
 
     def _restore(self, cache, bt, req):
         """One-dispatch restore of a preempted request: blocks below
@@ -308,14 +369,33 @@ class PagedServingEngine:
                                    jnp.asarray(pv), jnp.asarray(rows))
         return dict(cache, blocks=blocks), 1
 
-    def run(self, requests: list[Request], params) -> dict:
+    def run(self, requests: list[Request], params, *,
+            faults: FaultPlan | None = None,
+            recovery: RecoveryPolicy | None = None) -> dict:
         """Serve ``requests`` (honoring their ``arrival`` offsets) to
         completion.  Mutates each request in place (tokens, t_admitted,
         t_done, all relative to engine start) and returns run counters.
+
+        ``faults`` installs a FaultPlan for this run (falling back to the
+        engine default) and ``recovery`` overrides the RecoveryPolicy,
+        so one compiled engine serves both the fault-free baseline and
+        its chaos replays.  With faults armed at any site, run() still
+        never raises an injected fault: affected requests roll back to
+        their boundary checkpoint, retry with exponential segment
+        backoff, and either complete bit-identical to the fault-free run
+        or land dead-lettered (``Request.failure``) after bounded
+        retries.  The only exception that escapes the loop is
+        :class:`EngineStalledError` from the no-progress watchdog.
         """
         pcfg = self.pcfg
+        faults = faults if faults is not None else self.faults
+        policy = recovery if recovery is not None else self.recovery
+        if policy is None:
+            policy = RecoveryPolicy()
         sched = ContinuousBatchingScheduler(pcfg, sharing=self.sharing,
-                                            tenants=self.tenants)
+                                            tenants=self.tenants,
+                                            faults=faults)
+        rec = RecoveryManager(policy, sched)
         cache, _ = init_paged_cache(self.model.cfg, pcfg, self.cache_dtype)
         r, m = pcfg.max_slots, pcfg.max_blocks
         bt = np.full((r, m), TRASH_PAGE, np.int32)
@@ -362,28 +442,111 @@ class PagedServingEngine:
             req.tokens = [int(first_tok)]
             req.t_admitted = now
 
-        while nxt_arrival < len(queue) or sched.has_work:
+        boundary = 0
+
+        def stall_guard() -> None:
+            """The deduplicated no-progress watchdog: both the
+            nothing-running and the nothing-emitted paths count toward
+            one threshold, and tripping it raises a typed error carrying
+            the full diagnostic picture instead of a bare message."""
+            nonlocal no_progress
+            no_progress += 1
+            if no_progress > policy.watchdog_boundaries:
+                raise EngineStalledError(
+                    f"serving engine made no progress for "
+                    f"{policy.watchdog_boundaries} consecutive "
+                    f"boundaries with work outstanding: resource-"
+                    f"manager deadlock (diagnostic snapshot attached)",
+                    diagnostic_snapshot(sched, rec, boundary,
+                                        no_progress=no_progress,
+                                        n_segments=n_segments))
+
+        def vacate(req) -> None:
+            """Pull a faulted request off its slot: scheduler row freed,
+            device row parked on the scratch page."""
+            slot = req.slot
+            del sched.running[slot]
+            sched.free_slots.append(slot)
+            sched.free_slots.sort()
+            req.slot = None
+            req.stalled = False
+            req.protected = False
+            park_slot(slot)
+
+        def quarantine_running(req, reason: str) -> None:
+            """Roll a faulted running request back to its boundary
+            checkpoint: truncate its tokens to the checkpoint, snapshot
+            the pages that back it through the ordinary preemption
+            machinery (the retry is then a bit-identical one-dispatch
+            restore), vacate the slot, and park the request in the
+            quarantine pen for its backoff.  Healthy slots are
+            untouched."""
+            now2 = timer() - t0
+            del req.tokens[req.ckpt_tokens:]
+            if req.tokens:
+                swap = sched.rm.preempt(req, requeue=False)
+                self._swap_out(cache, swap, faults)
+                vacate(req)
+            else:
+                # no committed state to preserve: full restart
+                sched.rm.release_request(req)
+                vacate(req)
+                rec.reset_for_restart(req)
+            rec.hold(req, reason, boundary, now2)
+
+        def unwind_admission(kind: str, req) -> None:
+            """A boundary dispatch for this freshly (re)admitted request
+            faulted — or a dispatch it could alias did: its K/V never
+            materialized on device, so drop the pages and retry.  A
+            failed restore keeps its (verified) host image and retries
+            as a restore; a failed fresh admission restarts from the
+            prompt."""
+            now2 = timer() - t0
+            sched.rm.release_request(req)
+            vacate(req)
+            if req.swap is not None:
+                req.restore_blocks = (0, 0)
+            else:
+                rec.reset_for_restart(req)
+            rec.hold(req, f"injected {kind} dispatch fault",
+                     boundary, now2)
+
+        while (nxt_arrival < len(queue) or sched.has_work
+               or rec.has_quarantined):
             now = timer() - t0
             while (nxt_arrival < len(queue)
                    and queue[nxt_arrival].arrival <= now):
                 sched.submit(queue[nxt_arrival])
                 nxt_arrival += 1
+            boundary += 1
+            # recovery preflight: quarantined requests whose backoff
+            # expired rejoin their tenant queues; queued host images are
+            # checksum-verified exactly once (a corrupted/lost image
+            # becomes a restart *before* its restore is planned); under
+            # sustained pressure, stale queued work is shed (opt-in)
+            rec.release_due(boundary)
+            rec.verify_swaps(boundary, timer() - t0)
+            rec.shed_stalled(boundary, timer() - t0)
             # growth-on-demand: back the next segment's writes, possibly
             # preempting victims...
             preempted = sched.plan_growth()
             # ...whose pages must reach host memory before any dispatch
             # below can recycle them (their refs are already dropped)
             for req in preempted:
-                self._swap_out(cache, req.swap)
+                self._swap_out(cache, req.swap, faults)
                 park_slot(req.swap.slot)
             # grown block tables: new pages append to the owned prefix
             for slot, req in sched.running.items():
                 bt[slot, :len(req.pages)] = req.pages
             admitted = sched.try_admit()
+            rec.note_admitted(admitted)
             fresh = [r for r in admitted if r.swap is None]
             restored = [r for r in admitted if r.swap is not None]
+            failed_admissions: list = []
             if admitted:
                 t_pf = timer()
+                ok_admitted: list = []
+                restore_fault = False
                 # restores scatter FIRST: a same-boundary fresh admission
                 # may trie-share a restore-range page (full-chunk entries
                 # are matchable pre-ready by design), so its prefill must
@@ -392,26 +555,64 @@ class PagedServingEngine:
                 # scatter time; its aliased pages are only attended at
                 # the next segment, after every boundary dispatch.
                 for req in restored:
-                    cache, n_disp = self._restore(cache, bt, req)
+                    if restore_fault:
+                        failed_admissions.append(("restore", req))
+                        continue
+                    try:
+                        if faults is not None:
+                            faults.gate("dispatch_restore")
+                        cache, n_disp = self._restore(cache, bt, req)
+                    except InjectedFault:
+                        restore_fault = True
+                        failed_admissions.append(("restore", req))
+                        continue
                     n_restore_dispatches += n_disp
                     slot = req.slot
                     seq_lens[slot] = req.swap.n_tokens
                     tok[slot] = req.tokens[-1]
                     n_gen[slot] = len(req.tokens)
                     max_new[slot] = req.max_new_tokens
-                if fresh and self.prefill_mode == "batched":
-                    cache, tok1, n_disp = self._admit_batched(
-                        cache, bt, fresh, params)
+                    ok_admitted.append(req)
+                if restore_fault:
+                    # conservative: a fresh admission may prefix-share a
+                    # page in the failed restore's range — without the
+                    # host image resident, its prefill would attend
+                    # garbage.  The boundary's remaining admissions all
+                    # unwind and retry.
+                    failed_admissions.extend(("admission", r)
+                                             for r in fresh)
+                elif fresh and self.prefill_mode == "batched":
+                    cache, tok1, n_disp, failed = self._admit_batched(
+                        cache, bt, fresh, params, faults)
                     for req in fresh:
-                        start_request(req, tok1[req.slot], timer() - t0)
+                        if req.slot in tok1:
+                            start_request(req, tok1[req.slot],
+                                          timer() - t0)
+                            ok_admitted.append(req)
+                    failed_admissions.extend(("admission", r)
+                                             for r in failed)
                     n_prefill_dispatches += n_disp
                 elif fresh:
+                    admit_fault = False
                     for req in fresh:
-                        cache, first = self._admit_serial(cache, bt, req,
-                                                          params)
+                        if admit_fault:
+                            failed_admissions.append(("admission", req))
+                            continue
+                        try:
+                            if faults is not None:
+                                faults.gate("dispatch_admit")
+                            cache, first = self._admit_serial(
+                                cache, bt, req, params)
+                        except InjectedFault:
+                            admit_fault = True
+                            failed_admissions.append(("admission", req))
+                            continue
                         start_request(req, first, timer() - t0)
                         n_prefill_dispatches += 1
-                sched.finish_boundary(admitted)
+                        ok_admitted.append(req)
+                sched.finish_boundary(ok_admitted)
+                for kind, req in failed_admissions:
+                    unwind_admission(kind, req)
                 prefill_s += timer() - t_pf
             retire_finished(timer() - t0)
             if not sched.running:
@@ -421,32 +622,74 @@ class PagedServingEngine:
                     wait = queue[nxt_arrival].arrival - (timer() - t0)
                     if wait > 0:
                         time.sleep(wait)
-                elif sched.has_work:
-                    # queued/preempted requests, nothing running, no
-                    # arrivals left: only an admission can make progress
-                    # and this boundary produced none — count it toward
-                    # the deadlock guard instead of busy-spinning
-                    no_progress += 1
-                    if no_progress > 256:
-                        raise RuntimeError(
-                            "serving engine made no progress for 256 "
-                            "consecutive boundaries with queued work "
-                            "and nothing running: resource-manager "
-                            "deadlock (see ResourceManager.stats())")
+                elif sched.has_work or rec.has_quarantined:
+                    # queued/preempted/quarantined requests, nothing
+                    # running, no arrivals left: only an admission (or a
+                    # backoff expiry) can make progress and this boundary
+                    # produced none — count it toward the watchdog
+                    # instead of busy-spinning
+                    stall_guard()
                 continue
+            if policy.check_invariants:
+                # opt-in boundary audit of the state the dispatches are
+                # about to trust; a violating request is quarantined as
+                # a full restart (its pages are suspect) instead of
+                # crashing the engine
+                bad, _glob = rec.check_invariants(bt, seq_lens)
+                for req, why in bad:
+                    now2 = timer() - t0
+                    try:
+                        sched.rm.release_request(req)
+                    except AllocatorError:
+                        # the ledger itself is inconsistent for this
+                        # request; shed what bookkeeping we can
+                        req.charged = 0
+                        req.pages = None
+                    vacate(req)
+                    rec.reset_for_restart(req)
+                    rec.hold(req, f"invariant violation: {why}",
+                             boundary, now2)
+                if not sched.running:
+                    continue
+            # the boundary checkpoint: everything committed as of this
+            # instant is exactly what the device pages back — the
+            # watermark every later rollback truncates to
+            rec.checkpoint(sched.running.values())
             # activity is a pure function of scheduler state: stalled
             # slots sit a segment out (their frozen write slot stays
-            # inside pages they own), everyone else runs to max_new
+            # inside pages they own), everyone else runs to max_new.
+            # The feed token is re-derived from committed state, not the
+            # segment carry: an inactive slot's carry is masked to 0
+            # in-graph, so a slot coming back from a stalled segment
+            # would otherwise resume from a zero token (for healthy
+            # active slots tokens[-1] IS the carried token, so this is
+            # an identity)
             for slot, req in sched.running.items():
                 active[slot] = (not req.stalled) \
                     and n_gen[slot] < max_new[slot]
+                tok[slot] = req.tokens[-1]
 
+            poison = np.zeros((r,), np.float32)
+            if faults is not None and faults.should_fire("decode_poison"):
+                live = [s for s in sched.running if active[s]]
+                if live:
+                    poison[min(live)] = np.nan
+            try:
+                if faults is not None:
+                    faults.gate("dispatch_segment")
+            except InjectedFault:
+                # segment skipped wholesale: no state moved, nothing to
+                # roll back — the boundary simply retries.  Bounded by
+                # the plan's max_fires.
+                rec.segment_dispatch_faults += 1
+                continue
             t_seg = timer()
             cache = dict(cache, block_tables=jnp.asarray(bt),
                          seq_lens=jnp.asarray(seq_lens))
-            cache, tok_d, act_d, gen_d, toks, emits = self._segment(
-                params, cache, jnp.asarray(tok), jnp.asarray(active),
-                jnp.asarray(n_gen), jnp.asarray(max_new))
+            cache, tok_d, act_d, gen_d, toks, emits, pois_d = \
+                self._segment(params, cache, jnp.asarray(tok),
+                              jnp.asarray(active), jnp.asarray(n_gen),
+                              jnp.asarray(max_new), jnp.asarray(poison))
             n_segments += 1
             toks = np.asarray(toks)
             decode_s += timer() - t_seg
@@ -456,6 +699,7 @@ class PagedServingEngine:
             active = np.array(act_d)
             n_gen = np.array(gen_d)
             seq_lens = np.array(cache["seq_lens"])
+            poisoned = np.asarray(pois_d)
             for slot, req in sched.running.items():
                 req.tokens.extend(
                     int(t) for t in toks[emits[:, slot], slot])
@@ -463,6 +707,12 @@ class PagedServingEngine:
             # request preemptable again
             sched.end_segment(slot for slot in sched.running
                               if emits[:, slot].any())
+            # NaN/inf logit guard, before retirement: a poisoned slot
+            # stopped emitting in-graph and must never retire garbage —
+            # it rolls back to this boundary's checkpoint and retries
+            for slot in [s for s in list(sched.running) if poisoned[s]]:
+                quarantine_running(sched.running[slot],
+                                   "non-finite decode logits")
             if emits.any() or admitted or preempted:
                 no_progress = 0
             else:
@@ -470,23 +720,23 @@ class PagedServingEngine:
                 # (a stall implies an unprotected victim exists, and
                 # protected requests are freshly provisioned to run) —
                 # fail loudly rather than spin if a policy bug lands
-                no_progress += 1
-                if no_progress > 256:
-                    raise RuntimeError(
-                        "serving engine made no progress for 256 "
-                        "consecutive segments: resource-manager "
-                        "deadlock (see ResourceManager.stats())")
+                stall_guard()
             retire_finished(timer() - t0)
 
-        return {"n_segments": n_segments,
-                "n_admitted": sched.n_admitted,
-                "n_finished": len(sched.finished),
-                "n_prefill_dispatches": n_prefill_dispatches,
-                "n_restore_dispatches": n_restore_dispatches,
-                "prefill_s": prefill_s,    # summed admission dispatches
-                "decode_s": decode_s,      # summed segment dispatches
-                "wall_s": timer() - t0,
-                **sched.stats()}
+        out = {"n_segments": n_segments,
+               "n_admitted": sched.n_admitted,
+               "n_finished": len(sched.finished),
+               "n_dead_lettered": len(rec.dead),
+               "n_prefill_dispatches": n_prefill_dispatches,
+               "n_restore_dispatches": n_restore_dispatches,
+               "prefill_s": prefill_s,    # summed admission dispatches
+               "decode_s": decode_s,      # summed segment dispatches
+               "wall_s": timer() - t0,
+               "recovery": rec.stats(),
+               **sched.stats()}
+        if faults is not None:
+            out["faults"] = faults.summary()
+        return out
 
 
 def warmup(engine: PagedServingEngine, params, prompt_len: int,

@@ -1,0 +1,192 @@
+"""Deterministic fault-injection harness for the serving stack.
+
+MetaML's design-flow thesis is that a flow must survive bad candidate
+stages automatically instead of dying on the first anomaly; the serving
+engine's analogue is surviving runtime faults — allocation failures,
+corrupted host-swap images, poisoned decode numerics, failed dispatches
+— without taking down co-resident tenants.  You cannot test that
+property without a way to *cause* those faults, and chaos that is not
+reproducible is useless in CI.  This module provides the cause:
+
+- A :class:`FaultPlan` is a seed-driven schedule of injections over
+  named :data:`SITES`.  Every decision is drawn from a per-site
+  ``numpy`` generator keyed on ``(seed, crc32(site))``, and sites count
+  their *opportunities* (times the instrumented code path asked),
+  so a plan replays bit-exactly whenever the engine's boundary
+  schedule replays — which it does: the scheduler is deterministic
+  given the request set.
+- Injection sites are threaded through the stack as plain
+  ``plan.should_fire(site)`` probes: the page allocator
+  (``serving/paged_cache.py`` — alloc returns None as if the pool were
+  dry), the engine's swap-out path (host image corrupted or dropped
+  after its checksum is recorded), the decode segment (a NaN poisoned
+  into one slot's logits, in-graph), and the boundary dispatches
+  (``plan.gate(site)`` raises :class:`InjectedFault` instead of
+  dispatching).
+- Plans terminate by construction: every armed site carries a
+  ``max_fires`` bound, so a chaos run eventually reverts to fault-free
+  behavior — the property the recovery layer's liveness argument
+  (``serving/recovery.py``) needs.
+
+The harness is pure host-side bookkeeping (numpy only, no jax) and
+costs nothing when no plan is installed: every probe is behind a
+``plan is not None`` check in the instrumented modules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import numpy as np
+
+# Injection sites, in stack order.  Each names one instrumented probe:
+#   alloc            PageAllocator.alloc returns None (pool "dry")
+#   swap_corrupt     host swap image bytes flipped after checksum capture
+#   swap_loss        host swap image dropped entirely
+#   decode_poison    NaN added to one slot's logits inside the segment scan
+#   dispatch_admit   an admission prefill dispatch raises InjectedFault
+#   dispatch_restore a restore scatter dispatch raises InjectedFault
+#   dispatch_segment the decode segment dispatch raises InjectedFault
+SITES = ("alloc", "swap_corrupt", "swap_loss", "decode_poison",
+         "dispatch_admit", "dispatch_restore", "dispatch_segment")
+FAULT_SITES = SITES                     # package-level export alias
+
+
+class InjectedFault(RuntimeError):
+    """Raised by ``FaultPlan.gate`` at a dispatch site.  The recovery
+    layer catches exactly this type (plus AllocatorError) — real bugs
+    keep their own exception types and still fail loudly."""
+
+    def __init__(self, site: str, opportunity: int):
+        super().__init__(f"injected fault at site {site!r} "
+                         f"(opportunity {opportunity})")
+        self.site = site
+        self.opportunity = opportunity
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Arming of one site: skip the first ``after`` opportunities, then
+    fire with probability ``rate`` per opportunity, at most ``max_fires``
+    times.  ``rate=1.0, max_fires=1`` is a scheduled one-shot."""
+    site: str
+    rate: float = 1.0
+    max_fires: int = 1
+    after: int = 0
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r}; "
+                             f"sites are {SITES}")
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"{self.site}: rate must be in [0, 1]")
+        if self.max_fires < 1:
+            raise ValueError(f"{self.site}: max_fires must be >= 1 "
+                             f"(plans must terminate)")
+        if self.after < 0:
+            raise ValueError(f"{self.site}: after must be >= 0")
+
+
+def _site_rng(seed: int, site: str) -> np.random.Generator:
+    """Per-site stream: independent of every other site's draw count,
+    so adding a probe at one site never perturbs another's schedule."""
+    return np.random.default_rng([int(seed) & 0xFFFFFFFF,
+                                  zlib.crc32(site.encode())])
+
+
+class FaultPlan:
+    """A reproducible injection schedule over :data:`SITES`.
+
+    State is per-plan (opportunity/fire counters + a fired log), so a
+    fresh plan with the same seed and specs replays identically; reusing
+    one plan across engine runs continues its counters — construct a new
+    plan per run when you want replay.
+    """
+
+    def __init__(self, specs: "list[FaultSpec] | tuple" = (),
+                 seed: int = 0):
+        self.seed = int(seed)
+        self.specs: dict[str, FaultSpec] = {}
+        for spec in specs:
+            if spec.site in self.specs:
+                raise ValueError(f"duplicate spec for site {spec.site!r}")
+            self.specs[spec.site] = spec
+        self._rng = {site: _site_rng(self.seed, site)
+                     for site in self.specs}
+        self.opportunities = {site: 0 for site in SITES}
+        self.fires = {site: 0 for site in SITES}
+        self.log: list[tuple[str, int]] = []   # (site, opportunity idx)
+
+    # ------------------------------------------------------ constructors
+    @classmethod
+    def at(cls, seed: int = 0, **site_nth: int) -> "FaultPlan":
+        """Scheduled one-shots: ``FaultPlan.at(alloc=2, decode_poison=0)``
+        fires each named site exactly once, at its nth opportunity
+        (0-indexed)."""
+        return cls([FaultSpec(site=s, rate=1.0, max_fires=1, after=n)
+                    for s, n in site_nth.items()], seed=seed)
+
+    @classmethod
+    def seeded(cls, seed: int, sites=SITES, rate: float = 0.1,
+               max_fires: int = 2, after: int = 0) -> "FaultPlan":
+        """Probabilistic chaos over ``sites``, bounded per site."""
+        return cls([FaultSpec(site=s, rate=rate, max_fires=max_fires,
+                              after=after) for s in sites], seed=seed)
+
+    # ------------------------------------------------------------ probes
+    def should_fire(self, site: str) -> bool:
+        """One opportunity at ``site``; True when the plan injects here."""
+        if site not in SITES:
+            raise ValueError(f"unknown fault site {site!r}")
+        k = self.opportunities[site]
+        self.opportunities[site] = k + 1
+        spec = self.specs.get(site)
+        if spec is None or k < spec.after \
+                or self.fires[site] >= spec.max_fires:
+            return False
+        # draw only when armed: disarming a site never shifts the stream
+        if spec.rate < 1.0 and self._rng[site].random() >= spec.rate:
+            return False
+        self.fires[site] += 1
+        self.log.append((site, k))
+        return True
+
+    def gate(self, site: str) -> None:
+        """Dispatch-site probe: raise instead of returning True."""
+        if self.should_fire(site):
+            raise InjectedFault(site, self.opportunities[site] - 1)
+
+    @property
+    def total_fires(self) -> int:
+        return len(self.log)
+
+    def summary(self) -> dict:
+        """JSON-safe record of what actually fired (bench/telemetry)."""
+        return {"seed": self.seed,
+                "specs": {s: dataclasses.asdict(sp)
+                          for s, sp in sorted(self.specs.items())},
+                "fired": [list(e) for e in self.log],
+                "opportunities": {s: n for s, n
+                                  in sorted(self.opportunities.items())
+                                  if n}}
+
+
+# ------------------------------------------------- host-image integrity
+def image_checksum(*arrays) -> int:
+    """CRC32 over the host swap image — recorded at swap-out (before any
+    injected corruption), verified once before a restore is planned."""
+    crc = 0
+    for a in arrays:
+        crc = zlib.crc32(np.ascontiguousarray(a).tobytes(), crc)
+    return crc
+
+
+def corrupt_image(arr: np.ndarray) -> np.ndarray:
+    """Deterministically flip the first bytes of ``arr`` — the
+    swap_corrupt site's payload.  Returns a new array (device_get views
+    may be read-only)."""
+    buf = bytearray(np.ascontiguousarray(arr).tobytes())
+    for i in range(min(8, len(buf))):
+        buf[i] ^= 0xFF
+    return np.frombuffer(bytes(buf), dtype=arr.dtype).reshape(arr.shape)

@@ -41,6 +41,15 @@ from repro.configs.base import ArchConfig
 TRASH_PAGE = 0
 
 
+class AllocatorError(ValueError):
+    """Allocator misuse: double free, sharing a free page, negative
+    alloc.  A real exception rather than an ``assert`` so the checks
+    survive ``python -O``, and a dedicated type so the recovery layer
+    (serving/recovery.py) can quarantine the offending request instead
+    of crashing the engine.  Subclasses ValueError for back-compat with
+    callers that caught the old untyped raises."""
+
+
 @dataclasses.dataclass(frozen=True)
 class PagedCacheConfig:
     """Pool geometry + scheduler cadence for one serving engine."""
@@ -168,10 +177,14 @@ class PageAllocator:
     re-issued to unrelated content can never validate.
     """
 
-    def __init__(self, n_pages: int):
+    def __init__(self, n_pages: int, faults=None):
         if n_pages < 2:
             raise ValueError("need at least one allocatable page "
                              "beyond the reserved scratch page")
+        # Optional FaultPlan (serving/faults.py): the "alloc" site makes
+        # alloc() bounce as if the pool were dry — indistinguishable from
+        # real pressure, so callers exercise their real fallback paths.
+        self._faults = faults
         self._free = list(range(n_pages - 1, 0, -1))  # pop() -> ascending
         self._refs: dict[int, int] = {}               # page -> refcount
         self._gen = [0] * n_pages                     # bumped per alloc
@@ -204,7 +217,11 @@ class PageAllocator:
     def alloc(self, n: int) -> list[int] | None:
         """``n`` fresh pages at refcount 1, or None (all-or-nothing)."""
         if n < 0:
-            raise ValueError(f"alloc({n})")
+            raise AllocatorError(f"alloc({n})")
+        if n > 0 and self._faults is not None \
+                and self._faults.should_fire("alloc"):
+            self.alloc_failures += 1
+            return None
         if n > len(self._free):
             self.alloc_failures += 1
             return None
@@ -221,7 +238,7 @@ class PageAllocator:
         request's block table).  Sharing a free page is a bug."""
         for p in pages:
             if self._refs.get(p, 0) < 1:
-                raise ValueError(f"cannot share free/foreign page {p}")
+                raise AllocatorError(f"cannot share free/foreign page {p}")
         for p in pages:
             self._refs[p] += 1
         self.pages_shared_total += len(pages)
@@ -232,7 +249,7 @@ class PageAllocator:
         freed: list[int] = []
         for p in pages:
             if self._refs.get(p, 0) < 1:
-                raise ValueError(f"double free or foreign page {p}")
+                raise AllocatorError(f"double free or foreign page {p}")
             self._refs[p] -= 1
             if self._refs[p] == 0:
                 del self._refs[p]

@@ -105,6 +105,12 @@ class SwapState:
     slot: int
     host_k: Any = None                  # (L, len(pages), ps, KV, hd)
     host_v: Any = None
+    # Integrity: CRC of (host_k, host_v) recorded by the engine at
+    # device_get time; the recovery layer verifies it once before the
+    # restore is planned and converts a mismatch (or a lost image) into
+    # a full restart instead of scattering garbage K/V into the pool.
+    checksum: int | None = None
+    verified: bool = False
 
 
 @dataclasses.dataclass
@@ -119,6 +125,7 @@ class _TenantState:
     preempted_n: int = 0
     restored: int = 0
     pages_swapped: int = 0              # pages device_get'd out on preempt
+    dead_lettered: int = 0              # requests ended in RequestFailed
 
     @property
     def has_queued(self) -> bool:
@@ -160,9 +167,9 @@ class ResourceManager:
 
     def __init__(self, pcfg: PagedCacheConfig,
                  tenants: Iterable[TenantConfig] | None = None,
-                 *, sharing: bool | None = None):
+                 *, sharing: bool | None = None, faults=None):
         self.pcfg = pcfg
-        self.allocator = PageAllocator(pcfg.n_pages)
+        self.allocator = PageAllocator(pcfg.n_pages, faults=faults)
         self.sharing = (pcfg.enable_prefix_sharing if sharing is None
                         else bool(sharing))
         self.prefix_cache = PrefixCache(
@@ -184,6 +191,7 @@ class ResourceManager:
         self.pages_swapped_out = 0
         self.pages_swapped_in = 0
         self.pages_grown = 0
+        self.dead_letters = 0            # bumped by RecoveryManager
 
     # ------------------------------------------------------------ tenants
     def state(self, name: str) -> _TenantState:
@@ -353,11 +361,15 @@ class ResourceManager:
                 return (0, r.admit_seq)
         return max(cands, key=key)
 
-    def preempt(self, req: "Request") -> SwapState:
+    def preempt(self, req: "Request", requeue: bool = True) -> SwapState:
         """Snapshot ``req``'s device-resident state and release its
         pages.  The page *data* is untouched until some later dispatch
         reuses the pages — the engine must ``device_get`` the snapshot
-        before issuing one (serving/engine.py sequences this)."""
+        before issuing one (serving/engine.py sequences this).
+
+        ``requeue=False`` leaves the request out of the tenant queues:
+        the recovery layer uses this to quarantine a faulted request (it
+        re-enters via :meth:`requeue` once its backoff expires)."""
         sl = req.prompt_len + len(req.tokens) - 1
         swap = SwapState(pages=list(req.pages[:self.pcfg.pages_for(sl)]),
                          n_tokens=sl, slot=req.slot)
@@ -368,8 +380,20 @@ class ResourceManager:
         self.preemptions += 1
         self.pages_swapped_out += len(swap.pages)
         self.release_request(req)
-        st.preempted.append(req)
+        if requeue:
+            st.preempted.append(req)
         return swap
+
+    def requeue(self, req: "Request") -> None:
+        """Return a quarantined request to its tenant's queues: with a
+        (verified) host image through the preempted lane — a
+        one-dispatch restore — and without one through the pending lane
+        as a full restart."""
+        st = self.state(req.tenant)
+        if req.swap is not None:
+            st.preempted.append(req)
+        else:
+            st.pending.append(req)
 
     # --------------------------------------------------------- admission
     def plan_admission(self, req: "Request") -> AdmissionPlan | str:
@@ -502,6 +526,8 @@ class ResourceManager:
     def stats(self) -> dict[str, Any]:
         pc = self.prefix_cache
         return {
+            "free_pages": self.allocator.n_free,
+            "held_pages": self.allocator.n_held,
             "pages_allocated_total": self.allocator.pages_allocated_total,
             "pages_shared_total": self.allocator.pages_shared_total,
             "pages_grown": self.pages_grown,
@@ -511,6 +537,7 @@ class ResourceManager:
             "pages_swapped_in": self.pages_swapped_in,
             "free_low_water": self.allocator.free_low_water,
             "alloc_failures": self.allocator.alloc_failures,
+            "dead_letters": self.dead_letters,
             "pinned_pages": pc.pinned_pages if pc else 0,
             "pin_evictions": pc.pin_evictions if pc else 0,
             "prefix_lookups": pc.lookups if pc else 0,
@@ -522,6 +549,7 @@ class ResourceManager:
                     "preempted": st.preempted_n,
                     "restored": st.restored,
                     "pages_swapped": st.pages_swapped,
+                    "dead_lettered": st.dead_lettered,
                     "pages_charged": st.charged,
                     "page_budget": self.budget(name),
                     "queued": len(st.pending) + len(st.preempted),

@@ -80,6 +80,12 @@ class Request:
     # host-image block range [b0, b1) the engine scatters on restore (the
     # blocks before b0 were re-matched from the prefix trie)
     restore_blocks: tuple[int, int] = (0, 0)
+    # recovery state (serving/recovery.py): the boundary checkpoint every
+    # rollback targets, the bounded retry count, and — for dead-lettered
+    # requests — the typed RequestFailed terminal record
+    ckpt_tokens: int = 0               # committed tokens at last boundary
+    n_retries: int = 0                 # quarantine cycles so far
+    failure: Any = None                # RequestFailed when dead-lettered
 
     @property
     def prompt_len(self) -> int:
@@ -93,9 +99,11 @@ class Request:
 class ContinuousBatchingScheduler:
     def __init__(self, pcfg: PagedCacheConfig, *,
                  sharing: bool | None = None,
-                 tenants: Iterable[TenantConfig] | None = None):
+                 tenants: Iterable[TenantConfig] | None = None,
+                 faults=None):
         self.pcfg = pcfg
-        self.rm = ResourceManager(pcfg, tenants, sharing=sharing)
+        self.rm = ResourceManager(pcfg, tenants, sharing=sharing,
+                                  faults=faults)
         # aliases: the allocator/trie are owned by the resource manager
         self.allocator = self.rm.allocator
         self.sharing = self.rm.sharing

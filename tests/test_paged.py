@@ -720,8 +720,8 @@ class TestBatchedPrefillBitIdentical:
             bt = np.full((pcfg.max_slots, pcfg.max_blocks), TRASH_PAGE,
                          np.int32)
             if mode == "batched":
-                cache, toks, _ = eng._admit_batched(cache, bt, admitted,
-                                                    params)
+                cache, toks, _, _ = eng._admit_batched(cache, bt,
+                                                       admitted, params)
                 first = [toks[r.slot] for r in admitted]
             else:
                 first = []

@@ -314,6 +314,57 @@ def test_engine_preemption_tokens_bit_identical(gens, seg):
     assert {r.rid: r.tokens for r in rs} == {r.rid: r.tokens for r in ru}
 
 
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2 ** 20),
+       st.lists(st.integers(2, 10), min_size=2, max_size=4),
+       st.data())
+def test_engine_chaos_recovers_or_dead_letters(fault_seed, gens, data):
+    """Self-healing invariant: a random FaultPlan over a random
+    multi-tenant interleaving through a small pool always terminates
+    (the watchdog would raise on a hang), never leaks a page, and every
+    request either completes with tokens bit-identical to the fault-free
+    run or lands dead-lettered with a typed failure record."""
+    from repro.data.synthetic import lm_tokens
+    from repro.serving import (FaultPlan, PagedCacheConfig,
+                               PagedServingEngine, Request, RequestFailed,
+                               TenantConfig)
+    if "chaos" not in _SERVE:
+        _serve_engine(4, 7)                      # populate the model cache
+        _, model, _ = _SERVE["model"]
+        pcfg = PagedCacheConfig(page_size=8, n_pages=7, max_slots=2,
+                                max_blocks=4, segment_len=4)
+        _SERVE["chaos"] = PagedServingEngine(
+            model, pcfg, tenants=[TenantConfig("a"), TenantConfig("b"),
+                                  TenantConfig("c", weight=2.0)])
+    cfg, _, params = _SERVE["model"]
+    eng = _SERVE["chaos"]
+    tenants = [data.draw(st.sampled_from(["a", "b", "c"]),
+                         label=f"tenant[{i}]") for i in range(len(gens))]
+    prompts = [np.asarray(lm_tokens(16, cfg.vocab_size, seed=40 + i)
+                          ).astype(np.int32) for i in range(len(gens))]
+    mk = lambda: [Request(rid=i, prompt=prompts[i].copy(),  # noqa
+                          max_new_tokens=g, tenant=t)
+                  for i, (g, t) in enumerate(zip(gens, tenants))]
+    base = mk()
+    eng.run(base, params)
+    want = {r.rid: r.tokens for r in base}
+    chaos = mk()
+    plan = FaultPlan.seeded(fault_seed, rate=0.2, max_fires=2)
+    out = eng.run(chaos, params, faults=plan)
+    for r in chaos:
+        if r.failure is not None:
+            assert isinstance(r.failure, RequestFailed)
+        else:
+            assert r.tokens == want[r.rid], \
+                f"rid {r.rid} diverged after faults {plan.log}"
+    assert out["n_finished"] + out["n_dead_lettered"] == len(gens)
+    # the pool drains completely: every non-pinned page back on the free
+    # list, the ledger intact (quarantine/dead-letter paths leak nothing)
+    assert out["free_pages"] + out["pinned_pages"] \
+        == eng.pcfg.allocatable_pages
+    assert out["held_pages"] == out["pinned_pages"]
+
+
 # ---------------------------------------------------- binary search props
 @SETTINGS
 @given(st.floats(0.05, 0.95), st.sampled_from([0.01, 0.02, 0.05]))
