@@ -2,12 +2,15 @@
 
 Runs only ``bench_serve._bench_chaos`` — the undersized paged engine
 once fault-free and once under a fixed-seed FaultPlan (injected
-allocation failure + poisoned decode segment) — so CI can gate the
+allocation failure + poisoned decode segment), both with the boundary
+invariant audit armed (``RecoveryPolicy(check_invariants=True)``), so
+CI exercises the checker itself every run — so CI can gate the
 recovery layer's contract without paying for the full serving suite.
 Gates: every request finishes with tokens bit-identical to the
 fault-free run, nothing dead-letters under the default retry policy,
-and the healing wall overhead stays within ``CHAOS_OVERHEAD_MAX``.
-Results land in ``benchmarks/results/chaos_bench.json``.
+the audit flags nothing, and the healing wall overhead stays within
+``CHAOS_OVERHEAD_MAX``.  Results land in
+``benchmarks/results/chaos_bench.json``.
 """
 
 from __future__ import annotations
@@ -35,11 +38,14 @@ def main():
     row = _bench_chaos(cfg, model, params)
     results = {"backend": jax.default_backend(), "t": time.time(),
                "chaos": row}
+    # dead letters surface as structured (site, tenant, retries) records
+    dl = ",".join(f"{d['site']}@{d['tenant']}x{d['retries']}"
+                  for d in row["dead_letter_records"]) or "none"
     emit("serve_load_chaos", row["wall_chaos_s"] * 1e6,
          f"overhead={row['chaos_overhead']:.2f}x;"
          f"faults_fired={row['faults_fired']};"
          f"quarantines={row['recovery']['quarantines']};"
-         f"dead_lettered={row['dead_lettered']};"
+         f"dead_letters={dl};"
          f"tokens_equal={int(row['tokens_equal'])}")
     save_json("chaos_bench.json", results)
     if not (row["tokens_equal"] and row["all_finished"]
@@ -52,7 +58,11 @@ def main():
     if row["dead_lettered"]:
         raise SystemExit("chaos smoke failed: the default retry policy "
                          "must absorb the fixed-seed plan without "
-                         "dead-lettering any request")
+                         f"dead-lettering any request (records: {dl})")
+    if row["invariant_violations"]:
+        raise SystemExit("chaos smoke failed: the armed boundary "
+                         "invariant audit flagged state corruption: "
+                         f"{row['invariant_violations']}")
     if row["chaos_overhead"] > CHAOS_OVERHEAD_MAX:
         raise SystemExit(
             "chaos smoke failed: self-healing wall overhead "

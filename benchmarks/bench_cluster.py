@@ -1,0 +1,80 @@
+"""Cluster smoke suite: replicated serving under replica loss,
+standalone.
+
+Runs only ``bench_serve._bench_cluster`` — an 8-request shared-prefix
+burst through a 3-replica :class:`ServingCluster` behind the
+prefix-affinity FrontDoor, once fault-free and once with the loaded
+replica crashed mid-burst via a fixed-seed ``replica_crash`` injection —
+so CI can gate the failover contract without paying for the full serving
+suite.  Gates: the fault-free cluster's tokens are bit-identical to
+routing the same requests through one engine (routing is invisible);
+under the crash every request finishes bit-identical or dead-letters
+with a typed ReplicaLost; surviving replicas leak zero pages; the
+injected crash actually fired.  Affinity hit-rate is reported.  Results
+land in ``benchmarks/results/cluster_bench.json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+try:
+    from benchmarks.bench_serve import LOAD_ARCH, _bench_cluster
+    from benchmarks.common import emit, save_json
+except ImportError:
+    from bench_serve import LOAD_ARCH, _bench_cluster
+    from common import emit, save_json
+
+
+def main():
+    from repro.configs.registry import get_config
+    from repro.models.api import build_model
+
+    cfg = get_config(LOAD_ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    row = _bench_cluster(cfg, model, params)
+    results = {"backend": jax.default_backend(), "t": time.time(),
+               "cluster": row}
+    dl = ",".join(f"{d['site']}@{d.get('replica', '-')}"
+                  for d in row["dead_letter_records"]) or "none"
+    emit("serve_load_cluster", row["wall_chaos_s"] * 1e6,
+         f"replicas={row['n_replicas']};"
+         f"affinity_rate={row['affinity']['affinity_rate']:.2f};"
+         f"migrated={row['n_migrated']};"
+         f"restarted={row['n_restarted']};"
+         f"dead_letters={dl};"
+         f"tokens_equal={int(row['tokens_equal_single'])};"
+         f"chaos_ok={int(row['chaos_ok'])}")
+    save_json("cluster_bench.json", results)
+    if not row["tokens_equal_single"]:
+        raise SystemExit(
+            "cluster smoke failed: the fault-free 3-replica cluster must "
+            "generate tokens bit-identical to routing the same requests "
+            "through a single engine (see "
+            "benchmarks/results/cluster_bench.json)")
+    if not row["crash_fired"]:
+        raise SystemExit(
+            "cluster smoke failed: the fixed-seed replica_crash never "
+            "fired — the chaos pass measured nothing")
+    if not row["chaos_ok"]:
+        raise SystemExit(
+            "cluster smoke failed: with a replica crashed mid-burst, "
+            "every request must finish bit-identical to the "
+            "single-replica run or dead-letter with a typed ReplicaLost")
+    if row["chaos_finished"] + row["chaos_dead_lettered"] \
+            != row["burst"]:
+        raise SystemExit(
+            "cluster smoke failed: requests went missing — finished + "
+            "dead-lettered must account for the whole burst")
+    if not row["survivors_drained"]:
+        raise SystemExit(
+            "cluster smoke failed: surviving replicas leaked pages "
+            f"after failover: {row['survivor_leaks']}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -509,7 +509,7 @@ CHAOS_OVERHEAD_MAX = 5.0
 
 def _bench_chaos(cfg, model, params) -> dict:
     from repro.serving import (FaultPlan, PagedCacheConfig,
-                               PagedServingEngine)
+                               PagedServingEngine, RecoveryPolicy)
     from repro.serving.paged_cache import (preferred_page_size,
                                            preferred_segment_len)
 
@@ -526,23 +526,28 @@ def _bench_chaos(cfg, model, params) -> dict:
                             max_slots=OS_N, max_blocks=blocks,
                             segment_len=segment_len)
     engine = PagedServingEngine(model, pcfg)
+    # the boundary invariant audit runs armed in the smoke: CI exercises
+    # the checker itself, and anything it flags fails the token gate
+    policy = RecoveryPolicy(check_invariants=True)
     # a FaultPlan is stateful (opportunity counters), so each run gets a
     # fresh copy of the same schedule — that IS the reproducibility
     mk_plan = lambda: FaultPlan.at(alloc=1, decode_poison=1)  # noqa: E731
-    engine.run(_load_requests(cfg, OS_N, seed=5), params)     # warm
     engine.run(_load_requests(cfg, OS_N, seed=5), params,
-               faults=mk_plan())        # warm the recovery path shapes
+               recovery=policy)                               # warm
+    engine.run(_load_requests(cfg, OS_N, seed=5), params,
+               faults=mk_plan(),
+               recovery=policy)         # warm the recovery path shapes
 
     best_c = best_f = None
     tok_c = tok_f = stats_f = None
     for _ in range(ITERS):
         rc = _load_requests(cfg, OS_N, seed=5)
-        sc = engine.run(rc, params)
+        sc = engine.run(rc, params, recovery=policy)
         if best_c is None or sc["wall_s"] < best_c:
             best_c, tok_c = sc["wall_s"], {r.rid: list(r.tokens)
                                            for r in rc}
         rf = _load_requests(cfg, OS_N, seed=5)
-        sf = engine.run(rf, params, faults=mk_plan())
+        sf = engine.run(rf, params, faults=mk_plan(), recovery=policy)
         if best_f is None or sf["wall_s"] < best_f:
             best_f, tok_f, stats_f = sf["wall_s"], \
                 {r.rid: list(r.tokens) for r in rf}, sf
@@ -551,15 +556,135 @@ def _bench_chaos(cfg, model, params) -> dict:
         "prompt_len": LOAD_PROMPT, "gen": LOAD_GEN,
         "page_size": page_size, "segment_len": segment_len,
         "pool_pages": OS_N * admit_blocks,
+        "check_invariants": True,
         "wall_clean_s": best_c,
         "wall_chaos_s": best_f,
         "chaos_overhead": best_f / max(best_c, 1e-9),
         "faults_fired": len(stats_f["faults"]["fired"]),
         "faults": stats_f["faults"],
         "recovery": stats_f["recovery"],
+        "invariant_violations": stats_f["recovery"].get(
+            "invariant_violations", []),
         "all_finished": stats_f["n_finished"] == OS_N,
         "dead_lettered": stats_f["n_dead_lettered"],
+        "dead_letter_records": stats_f["recovery"].get(
+            "dead_letter_records", []),
         "tokens_equal": tok_f == tok_c,
+    }
+
+
+# Cluster row: replicated serving under replica loss.  An 8-request
+# shared-prefix burst goes through the FrontDoor of a 3-replica
+# ServingCluster three ways: single-engine oracle, fault-free cluster
+# (tokens must be bit-identical — routing is invisible), and a chaos
+# pass with the loaded replica crashed mid-burst (every request must
+# finish bit-identical or dead-letter with a typed ReplicaLost, and no
+# surviving replica may leak a page).  Affinity hit-rate is reported:
+# the shared prefix should concentrate the burst on the replica that
+# admitted it first.
+CLUSTER_REPLICAS = 3
+
+
+def _bench_cluster(cfg, model, params) -> dict:
+    from repro.serving import (FaultPlan, PagedCacheConfig,
+                               PagedServingEngine, ReplicaLost,
+                               ServingCluster)
+    from repro.serving.paged_cache import (preferred_page_size,
+                                           preferred_segment_len)
+
+    cap_tokens = PREFIX_PROMPT + PREFIX_GEN + 1
+    page_size = min(preferred_page_size(cfg, LOAD_SLOTS, cap_tokens),
+                    PREFIX_TARGET)
+    blocks = -(-cap_tokens // page_size)
+    pcfg = PagedCacheConfig(page_size=page_size,
+                            n_pages=LOAD_SLOTS * blocks + 1,
+                            max_slots=LOAD_SLOTS, max_blocks=blocks,
+                            segment_len=preferred_segment_len(
+                                cfg, LOAD_SLOTS, cap_tokens),
+                            retain_pages=PREFIX_TARGET // page_size)
+    engine = PagedServingEngine(model, pcfg)
+    # single-engine oracle (also warms every compiled shape the replica
+    # runs reuse — replicas multiply run-state, not compilations)
+    _, oracle = _prefix_requests(cfg, pcfg, LOAD_BURST, seed=21)
+    t0 = time.perf_counter()
+    engine.run(oracle, params)
+    wall_single = time.perf_counter() - t0
+    base = {r.rid: list(r.tokens) for r in oracle}
+
+    # fault-free cluster pass: routing must be invisible in the tokens.
+    # Two waves through one cluster: the first lands on cold tries (the
+    # whole burst routes before any replica admits, so it spreads
+    # least-loaded); the second measures prefix affinity against the
+    # retention-pinned tries the first wave warmed.
+    cl_clean = ServingCluster(engine, params, n_replicas=CLUSTER_REPLICAS)
+    prefix_len, reqs_c = _prefix_requests(cfg, pcfg, LOAD_BURST, seed=21)
+    t0 = time.perf_counter()
+    out_c = cl_clean.run(reqs_c)
+    wall_clean = time.perf_counter() - t0
+    fd_cold = dict(out_c["front_door"])
+    _, reqs_w = _prefix_requests(cfg, pcfg, LOAD_BURST, seed=21)
+    out_c = cl_clean.run(reqs_w)
+    fd_warm = out_c["front_door"]
+    warm_routed = fd_warm["routed"] - fd_cold["routed"]
+    warm_hits = fd_warm["affinity_hits"] - fd_cold["affinity_hits"]
+    tokens_equal_single = \
+        {r.rid: list(r.tokens) for r in reqs_c} == base \
+        and {r.rid: list(r.tokens) for r in reqs_w} == base
+
+    # chaos pass: kill whichever replica the affinity routing loaded, at
+    # its round-2 probe (opportunity CLUSTER_REPLICAS = r0 on round 2 —
+    # affinity concentrates the shared-prefix burst on r0), mid-burst
+    cl = ServingCluster(engine, params, n_replicas=CLUSTER_REPLICAS,
+                        faults=FaultPlan.at(
+                            replica_crash=CLUSTER_REPLICAS))
+    _, reqs_f = _prefix_requests(cfg, pcfg, LOAD_BURST, seed=21)
+    t0 = time.perf_counter()
+    out_f = cl.run(reqs_f)
+    wall_chaos = time.perf_counter() - t0
+    chaos_ok = all(
+        (list(r.tokens) == base[r.rid]) if r.failure is None
+        else isinstance(r.failure, ReplicaLost) for r in reqs_f)
+    leaks = []
+    for rep in cl.replicas:
+        if rep.fenced:
+            continue
+        s = rep.run.sched.rm.stats()
+        if s["free_pages"] + s["pinned_pages"] \
+                != pcfg.allocatable_pages \
+                or s["held_pages"] != s["pinned_pages"]:
+            leaks.append({"replica": rep.name,
+                          "free": s["free_pages"],
+                          "held": s["held_pages"],
+                          "pinned": s["pinned_pages"]})
+    return {
+        "load": f"cluster{CLUSTER_REPLICAS}",
+        "n_replicas": CLUSTER_REPLICAS,
+        "burst": LOAD_BURST,
+        "prefix_len": prefix_len, "prompt_len": PREFIX_PROMPT,
+        "page_size": page_size,
+        "wall_single_s": wall_single,
+        "wall_clean_s": wall_clean,
+        "wall_chaos_s": wall_chaos,
+        "tokens_equal_single": tokens_equal_single,
+        "clean_finished": out_c["n_finished"],
+        "clean_dead_lettered": out_c["n_dead_lettered"],
+        "affinity": {**fd_warm,
+                     "warm_wave_hits": warm_hits,
+                     "warm_wave_routed": warm_routed,
+                     "affinity_rate": (warm_hits / warm_routed
+                                       if warm_routed else 0.0)},
+        "crash_fired": out_f["faults"]["fired"] == [["replica_crash",
+                                                     CLUSTER_REPLICAS]],
+        "replica_states": {k: v["state"]
+                           for k, v in out_f["replicas"].items()},
+        "n_migrated": out_f["n_migrated"],
+        "n_restarted": out_f["n_restarted"],
+        "chaos_finished": out_f["n_finished"],
+        "chaos_dead_lettered": out_f["n_dead_lettered"],
+        "dead_letter_records": out_f["dead_letter_records"],
+        "chaos_ok": chaos_ok,
+        "survivor_leaks": leaks,
+        "survivors_drained": not leaks,
     }
 
 
@@ -713,11 +838,15 @@ def main():
                  f"pages_swapped={r['pages_swapped_out']};"
                  f"tokens_equal={int(r['tokens_equal'])}")
         elif r["load"] == "chaos":
+            # dead letters surface as structured (site, tenant, retries)
+            # records, not a bare count — an empty list is the pass state
+            dl = ",".join(f"{d['site']}@{d['tenant']}x{d['retries']}"
+                          for d in r["dead_letter_records"]) or "none"
             emit("serve_load_chaos", r["wall_chaos_s"] * 1e6,
                  f"overhead={r['chaos_overhead']:.2f}x;"
                  f"faults_fired={r['faults_fired']};"
                  f"quarantines={r['recovery']['quarantines']};"
-                 f"dead_lettered={r['dead_lettered']};"
+                 f"dead_letters={dl};"
                  f"tokens_equal={int(r['tokens_equal'])}")
         else:
             emit(f"serve_load_{r['load']}_{r['path']}",

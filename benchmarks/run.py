@@ -10,36 +10,69 @@ Prints ``name,us_per_call,derived`` CSV rows:
                     flash-decode vs the seed Python-loop jnp path)
   bench_chaos    -> self-healing smoke (fixed-seed fault injection
                     through the paged engine; token-identity gated)
+  bench_cluster  -> replicated-serving smoke (replica crash mid-burst
+                    through the 3-replica front door; failover gated)
 
 Usage: ``python benchmarks/run.py [suite ...]`` where suite is any of
-pruning/combined/table2/kernels/roofline/serve/chaos (default: all but
-chaos, whose row already rides inside serve).  CI runs ``run.py
-kernels``, ``run.py serve`` and ``run.py chaos`` as the smoke suites;
-the kernel autotuner persists its tile cache at $REPRO_AUTOTUNE_CACHE
-so warm runs skip the tile search.
+the names below (default: all but chaos and cluster, whose engine rows
+would otherwise be paid for twice).  ``run.py --list`` prints the
+available suites.  CI runs ``run.py kernels``, ``run.py serve``,
+``run.py chaos`` and ``run.py cluster`` as the smoke suites; the kernel
+autotuner persists its tile cache at $REPRO_AUTOTUNE_CACHE so warm runs
+skip the tile search.
 """
 import sys
 
+# suite -> (module attr on benchmarks package, one-line description)
+SUITES = {
+    "pruning": ("bench_pruning",
+                "Fig. 3/4 auto-pruning curves and resource proxies"),
+    "combined": ("bench_combined",
+                 "Fig. 5 combined strategies and order sensitivity"),
+    "table2": ("bench_table2",
+               "Table II strategy comparison with resource proxies"),
+    "kernels": ("bench_kernels",
+                "kernel micro-benchmarks, tuned vs default tiles"),
+    "roofline": ("bench_roofline",
+                 "roofline rows from the dry-run sweeps"),
+    "serve": ("bench_serve",
+              "paged serving engine: throughput, load, tenants, chaos"),
+    "chaos": ("bench_chaos",
+              "self-healing smoke: fixed-seed faults, token-identity "
+              "gated, boundary invariant audit armed"),
+    "cluster": ("bench_cluster",
+                "replicated serving: replica crash mid-burst, failover "
+                "and zero-leak gated, affinity reported"),
+}
+# these rows already ride inside (or duplicate the engine build of) the
+# serve suite: running them by default would pay for the build twice
+NOT_IN_DEFAULT = ("chaos", "cluster")
+
+
+def _suite_listing() -> str:
+    return "\n".join(f"  {name:<9} {desc}"
+                     for name, (_, desc) in SUITES.items())
+
 
 def main(argv: list[str] | None = None) -> None:
+    if argv and any(a in ("--list", "-l") for a in argv):
+        print("available suites:")
+        print(_suite_listing())
+        return
     if "benchmarks" not in sys.modules:
         sys.path.insert(0, __file__.rsplit("/", 2)[0])
-    from benchmarks import (bench_chaos, bench_combined, bench_kernels,
-                            bench_pruning, bench_roofline, bench_serve,
-                            bench_table2)
-    suites = {"pruning": bench_pruning, "combined": bench_combined,
-              "table2": bench_table2, "kernels": bench_kernels,
-              "roofline": bench_roofline, "serve": bench_serve,
-              "chaos": bench_chaos}
-    # the chaos row already rides inside the serve suite: running both by
-    # default would pay for the engine build twice
-    picked = argv if argv else [s for s in suites if s != "chaos"]
-    unknown = [s for s in picked if s not in suites]
+    import benchmarks
+    import importlib
+    picked = argv if argv else [s for s in SUITES
+                                if s not in NOT_IN_DEFAULT]
+    unknown = [s for s in picked if s not in SUITES]
     if unknown:
-        raise SystemExit(f"unknown suite(s) {unknown}; have {list(suites)}")
+        raise SystemExit(f"unknown suite(s) {unknown}; available:\n"
+                         f"{_suite_listing()}")
     print("name,us_per_call,derived")
     for s in picked:
-        suites[s].main()
+        mod = importlib.import_module(f"benchmarks.{SUITES[s][0]}")
+        mod.main()
 
 
 if __name__ == '__main__':

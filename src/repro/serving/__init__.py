@@ -27,6 +27,11 @@ under a quota-aware preemptive resource manager.
   swap-image checksums, an opt-in boundary invariant checker, load
   shedding with typed RequestFailed dead-letter records, and the
   EngineStalledError watchdog with its diagnostic snapshot.
+- cluster: replicated serving — N EngineRun replicas of one compiled
+  engine behind a prefix-affinity FrontDoor, a boundary-heartbeat
+  health model (SUSPECT/DEAD with permanent fencing), cross-replica
+  failover via verified host swap images, graceful drain/rejoin for
+  rolling restarts, and typed ReplicaLost dead letters.
 """
 
 from repro.serving.paged_cache import (AllocatorError, PageAllocator,
@@ -34,7 +39,8 @@ from repro.serving.paged_cache import (AllocatorError, PageAllocator,
                                        PrefixMatch, TRASH_PAGE,
                                        init_paged_cache,
                                        preferred_page_size)
-from repro.serving.faults import (FAULT_SITES, FaultPlan, FaultSpec,
+from repro.serving.faults import (ENGINE_SITES, FAULT_SITES,
+                                  REPLICA_SITES, FaultPlan, FaultSpec,
                                   InjectedFault)
 from repro.serving.recovery import (EngineStalledError, RecoveryManager,
                                     RecoveryPolicy, RequestFailed,
@@ -42,15 +48,21 @@ from repro.serving.recovery import (EngineStalledError, RecoveryManager,
 from repro.serving.resources import (DEFAULT_TENANT, ResourceManager,
                                      SwapState, TenantConfig)
 from repro.serving.scheduler import ContinuousBatchingScheduler, Request
-from repro.serving.engine import PagedServingEngine
+from repro.serving.engine import EngineRun, PagedServingEngine
+from repro.serving.cluster import (FrontDoor, HealthPolicy, Replica,
+                                   ReplicaLost, ServingCluster)
 
 __all__ = [
     "AllocatorError", "PageAllocator", "PagedCacheConfig", "PrefixCache",
     "PrefixMatch", "TRASH_PAGE", "init_paged_cache",
     "preferred_page_size",
-    "FAULT_SITES", "FaultPlan", "FaultSpec", "InjectedFault",
+    "ENGINE_SITES", "FAULT_SITES", "REPLICA_SITES", "FaultPlan",
+    "FaultSpec", "InjectedFault",
     "EngineStalledError", "RecoveryManager", "RecoveryPolicy",
     "RequestFailed", "diagnostic_snapshot",
     "DEFAULT_TENANT", "ResourceManager", "SwapState", "TenantConfig",
-    "ContinuousBatchingScheduler", "Request", "PagedServingEngine",
+    "ContinuousBatchingScheduler", "Request",
+    "EngineRun", "PagedServingEngine",
+    "FrontDoor", "HealthPolicy", "Replica", "ReplicaLost",
+    "ServingCluster",
 ]

@@ -386,356 +386,439 @@ class PagedServingEngine:
         or land dead-lettered (``Request.failure``) after bounded
         retries.  The only exception that escapes the loop is
         :class:`EngineStalledError` from the no-progress watchdog.
+
+        This is a thin wrapper over :class:`EngineRun`: feed arrivals,
+        step boundaries, sleep through idle gaps.  A cluster
+        (serving/cluster.py) instead drives N EngineRuns round-robin off
+        the same compiled engine.
         """
-        pcfg = self.pcfg
-        faults = faults if faults is not None else self.faults
-        policy = recovery if recovery is not None else self.recovery
-        if policy is None:
-            policy = RecoveryPolicy()
-        sched = ContinuousBatchingScheduler(pcfg, sharing=self.sharing,
-                                            tenants=self.tenants,
-                                            faults=faults)
-        rec = RecoveryManager(policy, sched)
-        cache, _ = init_paged_cache(self.model.cfg, pcfg, self.cache_dtype)
-        r, m = pcfg.max_slots, pcfg.max_blocks
-        bt = np.full((r, m), TRASH_PAGE, np.int32)
-        seq_lens = np.zeros((r,), np.int32)
-        tok = np.zeros((r, 1), np.int32)
-        active = np.zeros((r,), bool)
-        n_gen = np.zeros((r,), np.int32)
-        max_new = np.ones((r,), np.int32)
-        timer = time.perf_counter
+        er = EngineRun(self, params, faults=faults, recovery=recovery)
         queue = sorted(requests, key=lambda q: q.arrival)
         nxt_arrival = 0
-        n_segments = 0
-        n_prefill_dispatches = 0
-        n_restore_dispatches = 0
-        prefill_s = 0.0
-        decode_s = 0.0
-        no_progress = 0
-        t0 = timer()
-
-        def park_slot(slot: int) -> None:
-            """Return a vacated slot to the inert state: row on the
-            scratch page, no position, no activity.  Shared by
-            retirement and preemption — the two ways a slot empties."""
-            bt[slot] = TRASH_PAGE
-            seq_lens[slot] = 0
-            tok[slot] = 0
-            active[slot] = False
-            n_gen[slot] = 0
-
-        def retire_finished(now: float) -> None:
-            for slot, req in list(sched.running.items()):
-                if n_gen[slot] >= req.max_new_tokens:
-                    req.t_done = now
-                    sched.complete(slot)
-                    park_slot(slot)
-
-        def start_request(req, first_tok: int, now: float) -> None:
-            slot = req.slot
-            seq_lens[slot] = req.prompt_len
-            tok[slot] = first_tok
-            n_gen[slot] = 1
-            max_new[slot] = req.max_new_tokens
-            active[slot] = req.max_new_tokens > 1
-            req.tokens = [int(first_tok)]
-            req.t_admitted = now
-
-        boundary = 0
-
-        def stall_guard() -> None:
-            """The deduplicated no-progress watchdog: both the
-            nothing-running and the nothing-emitted paths count toward
-            one threshold, and tripping it raises a typed error carrying
-            the full diagnostic picture instead of a bare message."""
-            nonlocal no_progress
-            no_progress += 1
-            if no_progress > policy.watchdog_boundaries:
-                raise EngineStalledError(
-                    f"serving engine made no progress for "
-                    f"{policy.watchdog_boundaries} consecutive "
-                    f"boundaries with work outstanding: resource-"
-                    f"manager deadlock (diagnostic snapshot attached)",
-                    diagnostic_snapshot(sched, rec, boundary,
-                                        no_progress=no_progress,
-                                        n_segments=n_segments))
-
-        def vacate(req) -> None:
-            """Pull a faulted request off its slot: scheduler row freed,
-            device row parked on the scratch page."""
-            slot = req.slot
-            del sched.running[slot]
-            sched.free_slots.append(slot)
-            sched.free_slots.sort()
-            req.slot = None
-            req.stalled = False
-            req.protected = False
-            park_slot(slot)
-
-        def quarantine_running(req, reason: str) -> None:
-            """Roll a faulted running request back to its boundary
-            checkpoint: truncate its tokens to the checkpoint, snapshot
-            the pages that back it through the ordinary preemption
-            machinery (the retry is then a bit-identical one-dispatch
-            restore), vacate the slot, and park the request in the
-            quarantine pen for its backoff.  Healthy slots are
-            untouched."""
-            now2 = timer() - t0
-            del req.tokens[req.ckpt_tokens:]
-            if req.tokens:
-                swap = sched.rm.preempt(req, requeue=False)
-                self._swap_out(cache, swap, faults)
-                vacate(req)
-            else:
-                # no committed state to preserve: full restart
-                sched.rm.release_request(req)
-                vacate(req)
-                rec.reset_for_restart(req)
-            rec.hold(req, reason, boundary, now2)
-
-        def unwind_admission(kind: str, req) -> None:
-            """A boundary dispatch for this freshly (re)admitted request
-            faulted — or a dispatch it could alias did: its K/V never
-            materialized on device, so drop the pages and retry.  A
-            failed restore keeps its (verified) host image and retries
-            as a restore; a failed fresh admission restarts from the
-            prompt."""
-            now2 = timer() - t0
-            sched.rm.release_request(req)
-            vacate(req)
-            if req.swap is not None:
-                req.restore_blocks = (0, 0)
-            else:
-                rec.reset_for_restart(req)
-            rec.hold(req, f"injected {kind} dispatch fault",
-                     boundary, now2)
-
-        while (nxt_arrival < len(queue) or sched.has_work
-               or rec.has_quarantined):
-            now = timer() - t0
+        while nxt_arrival < len(queue) or er.has_work:
+            now = er.clock()
             while (nxt_arrival < len(queue)
                    and queue[nxt_arrival].arrival <= now):
-                sched.submit(queue[nxt_arrival])
+                er.submit(queue[nxt_arrival])
                 nxt_arrival += 1
-            boundary += 1
-            # recovery preflight: quarantined requests whose backoff
-            # expired rejoin their tenant queues; queued host images are
-            # checksum-verified exactly once (a corrupted/lost image
-            # becomes a restart *before* its restore is planned); under
-            # sustained pressure, stale queued work is shed (opt-in)
-            rec.release_due(boundary)
-            rec.verify_swaps(boundary, timer() - t0)
-            rec.shed_stalled(boundary, timer() - t0)
-            # growth-on-demand: back the next segment's writes, possibly
-            # preempting victims...
-            preempted = sched.plan_growth()
-            # ...whose pages must reach host memory before any dispatch
-            # below can recycle them (their refs are already dropped)
-            for req in preempted:
-                self._swap_out(cache, req.swap, faults)
-                park_slot(req.swap.slot)
-            # grown block tables: new pages append to the owned prefix
-            for slot, req in sched.running.items():
-                bt[slot, :len(req.pages)] = req.pages
-            admitted = sched.try_admit()
-            rec.note_admitted(admitted)
-            fresh = [r for r in admitted if r.swap is None]
-            restored = [r for r in admitted if r.swap is not None]
-            failed_admissions: list = []
-            if admitted:
-                t_pf = timer()
-                ok_admitted: list = []
-                restore_fault = False
-                # restores scatter FIRST: a same-boundary fresh admission
-                # may trie-share a restore-range page (full-chunk entries
-                # are matchable pre-ready by design), so its prefill must
-                # only dispatch after the host image is back on device.
-                # The reverse order is safe — a restore reads nothing at
-                # scatter time; its aliased pages are only attended at
-                # the next segment, after every boundary dispatch.
-                for req in restored:
-                    if restore_fault:
-                        failed_admissions.append(("restore", req))
-                        continue
-                    try:
-                        if faults is not None:
-                            faults.gate("dispatch_restore")
-                        cache, n_disp = self._restore(cache, bt, req)
-                    except InjectedFault:
-                        restore_fault = True
-                        failed_admissions.append(("restore", req))
-                        continue
-                    n_restore_dispatches += n_disp
-                    slot = req.slot
-                    seq_lens[slot] = req.swap.n_tokens
-                    tok[slot] = req.tokens[-1]
-                    n_gen[slot] = len(req.tokens)
-                    max_new[slot] = req.max_new_tokens
-                    ok_admitted.append(req)
-                if restore_fault:
-                    # conservative: a fresh admission may prefix-share a
-                    # page in the failed restore's range — without the
-                    # host image resident, its prefill would attend
-                    # garbage.  The boundary's remaining admissions all
-                    # unwind and retry.
-                    failed_admissions.extend(("admission", r)
-                                             for r in fresh)
-                elif fresh and self.prefill_mode == "batched":
-                    cache, tok1, n_disp, failed = self._admit_batched(
-                        cache, bt, fresh, params, faults)
-                    for req in fresh:
-                        if req.slot in tok1:
-                            start_request(req, tok1[req.slot],
-                                          timer() - t0)
-                            ok_admitted.append(req)
-                    failed_admissions.extend(("admission", r)
-                                             for r in failed)
-                    n_prefill_dispatches += n_disp
-                elif fresh:
-                    admit_fault = False
-                    for req in fresh:
-                        if admit_fault:
-                            failed_admissions.append(("admission", req))
-                            continue
-                        try:
-                            if faults is not None:
-                                faults.gate("dispatch_admit")
-                            cache, first = self._admit_serial(
-                                cache, bt, req, params)
-                        except InjectedFault:
-                            admit_fault = True
-                            failed_admissions.append(("admission", req))
-                            continue
-                        start_request(req, first, timer() - t0)
-                        n_prefill_dispatches += 1
-                        ok_admitted.append(req)
-                sched.finish_boundary(ok_admitted)
-                for kind, req in failed_admissions:
-                    unwind_admission(kind, req)
-                prefill_s += timer() - t_pf
-            retire_finished(timer() - t0)
-            if not sched.running:
+            if er.step() == "idle":
                 if nxt_arrival < len(queue):
                     # the pre-sorted queue's next arrival is the only
                     # possible event while idle: sleep the whole gap
-                    wait = queue[nxt_arrival].arrival - (timer() - t0)
+                    wait = queue[nxt_arrival].arrival - er.clock()
                     if wait > 0:
                         time.sleep(wait)
-                elif sched.has_work or rec.has_quarantined:
+                elif er.has_work:
                     # queued/preempted/quarantined requests, nothing
                     # running, no arrivals left: only an admission (or a
                     # backoff expiry) can make progress and this boundary
                     # produced none — count it toward the watchdog
                     # instead of busy-spinning
-                    stall_guard()
-                continue
-            if policy.check_invariants:
-                # opt-in boundary audit of the state the dispatches are
-                # about to trust; a violating request is quarantined as
-                # a full restart (its pages are suspect) instead of
-                # crashing the engine
-                bad, _glob = rec.check_invariants(bt, seq_lens)
-                for req, why in bad:
-                    now2 = timer() - t0
-                    try:
-                        sched.rm.release_request(req)
-                    except AllocatorError:
-                        # the ledger itself is inconsistent for this
-                        # request; shed what bookkeeping we can
-                        req.charged = 0
-                        req.pages = None
-                    vacate(req)
-                    rec.reset_for_restart(req)
-                    rec.hold(req, f"invariant violation: {why}",
-                             boundary, now2)
-                if not sched.running:
+                    er.note_stall()
+        return er.result()
+
+
+class EngineRun:
+    """One in-flight serving run: every piece of boundary-loop state —
+    scheduler, recovery manager, device cache, per-slot host mirrors,
+    counters — as attributes, advanced one segment boundary at a time by
+    :meth:`step`.
+
+    The split from :class:`PagedServingEngine` (compiled entry points,
+    stateless across runs) is what makes replication cheap: a
+    :class:`~repro.serving.cluster.ServingCluster` holds ONE engine —
+    one set of jitted callables, compiled once — and N EngineRuns, each
+    with its own page pool, block tables, tenant ledgers, and prefix
+    trie, stepped round-robin.  ``submit`` injects work mid-run (the
+    front door routes per arrival) and ``evacuate`` empties the run for
+    a graceful drain, with every running request preserved as a verified
+    host swap image.
+    """
+
+    def __init__(self, engine: PagedServingEngine, params, *,
+                 faults: FaultPlan | None = None,
+                 recovery: RecoveryPolicy | None = None,
+                 clock=None):
+        self.engine = engine
+        self.params = params
+        pcfg = engine.pcfg
+        self.pcfg = pcfg
+        self.faults = faults if faults is not None else engine.faults
+        policy = recovery if recovery is not None else engine.recovery
+        self.policy = policy if policy is not None else RecoveryPolicy()
+        self.sched = ContinuousBatchingScheduler(
+            pcfg, sharing=engine.sharing, tenants=engine.tenants,
+            faults=self.faults)
+        self.rec = RecoveryManager(self.policy, self.sched)
+        self.cache, _ = init_paged_cache(engine.model.cfg, pcfg,
+                                         engine.cache_dtype)
+        r, m = pcfg.max_slots, pcfg.max_blocks
+        self.bt = np.full((r, m), TRASH_PAGE, np.int32)
+        self.seq_lens = np.zeros((r,), np.int32)
+        self.tok = np.zeros((r, 1), np.int32)
+        self.active = np.zeros((r,), bool)
+        self.n_gen = np.zeros((r,), np.int32)
+        self.max_new = np.ones((r,), np.int32)
+        self.boundary = 0
+        self.no_progress = 0
+        self.n_segments = 0
+        self.n_prefill_dispatches = 0
+        self.n_restore_dispatches = 0
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+        if clock is None:
+            t0 = time.perf_counter()
+            clock = lambda: time.perf_counter() - t0   # noqa: E731
+        self.clock = clock          # shared by all replicas of a cluster
+
+    # ----------------------------------------------------------- frontend
+    def submit(self, req: Request) -> None:
+        self.sched.submit(req)
+
+    @property
+    def has_work(self) -> bool:
+        return self.sched.has_work or self.rec.has_quarantined
+
+    # ------------------------------------------------- slot/request moves
+    def _park_slot(self, slot: int) -> None:
+        """Return a vacated slot to the inert state: row on the scratch
+        page, no position, no activity.  Shared by retirement,
+        preemption, and quarantine — every way a slot empties."""
+        self.bt[slot] = TRASH_PAGE
+        self.seq_lens[slot] = 0
+        self.tok[slot] = 0
+        self.active[slot] = False
+        self.n_gen[slot] = 0
+
+    def _retire_finished(self, now: float) -> None:
+        for slot, req in list(self.sched.running.items()):
+            if self.n_gen[slot] >= req.max_new_tokens:
+                req.t_done = now
+                self.sched.complete(slot)
+                self._park_slot(slot)
+
+    def _start_request(self, req: Request, first_tok: int,
+                       now: float) -> None:
+        slot = req.slot
+        self.seq_lens[slot] = req.prompt_len
+        self.tok[slot] = first_tok
+        self.n_gen[slot] = 1
+        self.max_new[slot] = req.max_new_tokens
+        self.active[slot] = req.max_new_tokens > 1
+        req.tokens = [int(first_tok)]
+        req.t_admitted = now
+
+    def note_stall(self) -> None:
+        """The deduplicated no-progress watchdog: both the
+        nothing-running and the nothing-emitted paths count toward one
+        threshold, and tripping it raises a typed error carrying the
+        full diagnostic picture instead of a bare message."""
+        self.no_progress += 1
+        if self.no_progress > self.policy.watchdog_boundaries:
+            raise EngineStalledError(
+                f"serving engine made no progress for "
+                f"{self.policy.watchdog_boundaries} consecutive "
+                f"boundaries with work outstanding: resource-"
+                f"manager deadlock (diagnostic snapshot attached)",
+                diagnostic_snapshot(self.sched, self.rec, self.boundary,
+                                    no_progress=self.no_progress,
+                                    n_segments=self.n_segments))
+
+    def _vacate(self, req: Request) -> None:
+        """Pull a faulted request off its slot: scheduler row freed,
+        device row parked on the scratch page."""
+        self._park_slot(self.sched.vacate(req))
+
+    def _quarantine_running(self, req: Request, reason: str,
+                            site: str) -> None:
+        """Roll a faulted running request back to its boundary
+        checkpoint: truncate its tokens to the checkpoint, snapshot the
+        pages that back it through the ordinary preemption machinery
+        (the retry is then a bit-identical one-dispatch restore), vacate
+        the slot, and park the request in the quarantine pen for its
+        backoff.  Healthy slots are untouched."""
+        now = self.clock()
+        del req.tokens[req.ckpt_tokens:]
+        if req.tokens:
+            swap = self.sched.rm.preempt(req, requeue=False)
+            self.engine._swap_out(self.cache, swap, self.faults)
+            self._vacate(req)
+        else:
+            # no committed state to preserve: full restart
+            self.sched.rm.release_request(req)
+            self._vacate(req)
+            self.rec.reset_for_restart(req)
+        self.rec.hold(req, reason, self.boundary, now, site=site)
+
+    def _unwind_admission(self, kind: str, req: Request) -> None:
+        """A boundary dispatch for this freshly (re)admitted request
+        faulted — or a dispatch it could alias did: its K/V never
+        materialized on device, so drop the pages and retry.  A failed
+        restore keeps its (verified) host image and retries as a
+        restore; a failed fresh admission restarts from the prompt."""
+        now = self.clock()
+        self.sched.rm.release_request(req)
+        self._vacate(req)
+        if req.swap is not None:
+            req.restore_blocks = (0, 0)
+        else:
+            self.rec.reset_for_restart(req)
+        self.rec.hold(req, f"injected {kind} dispatch fault",
+                      self.boundary, now,
+                      site="dispatch_restore" if kind == "restore"
+                      else "dispatch_admit")
+
+    # ------------------------------------------------------ one boundary
+    def step(self) -> str:
+        """Advance one segment boundary (the host-loop order run()'s
+        docstring fixes): recovery preflight → growth/swap-out →
+        admissions → retire → invariant audit → checkpoint → segment
+        dispatch → commit + quarantine + retire.
+
+        Returns ``"ran"`` after a segment dispatch, ``"skipped"`` when an
+        injected ``dispatch_segment`` fault dropped it (the boundary
+        simply retries), and ``"idle"`` when nothing is running — the
+        caller decides whether idleness means sleep (arrivals coming),
+        a watchdog tick (:meth:`note_stall` — queued work that cannot
+        admit), or that the run is simply drained.
+        """
+        engine, sched, rec = self.engine, self.sched, self.rec
+        faults, clock = self.faults, self.clock
+        bt, seq_lens = self.bt, self.seq_lens
+        self.boundary += 1
+        boundary = self.boundary
+        # recovery preflight: quarantined requests whose backoff
+        # expired rejoin their tenant queues; queued host images are
+        # checksum-verified exactly once (a corrupted/lost image
+        # becomes a restart *before* its restore is planned); under
+        # sustained pressure, stale queued work is shed (opt-in)
+        rec.release_due(boundary)
+        rec.verify_swaps(boundary, clock())
+        rec.shed_stalled(boundary, clock())
+        # growth-on-demand: back the next segment's writes, possibly
+        # preempting victims...
+        preempted = sched.plan_growth()
+        # ...whose pages must reach host memory before any dispatch
+        # below can recycle them (their refs are already dropped)
+        for req in preempted:
+            engine._swap_out(self.cache, req.swap, faults)
+            self._park_slot(req.swap.slot)
+        # grown block tables: new pages append to the owned prefix
+        for slot, req in sched.running.items():
+            bt[slot, :len(req.pages)] = req.pages
+        admitted = sched.try_admit()
+        rec.note_admitted(admitted)
+        fresh = [r for r in admitted if r.swap is None]
+        restored = [r for r in admitted if r.swap is not None]
+        failed_admissions: list = []
+        if admitted:
+            t_pf = time.perf_counter()
+            ok_admitted: list = []
+            restore_fault = False
+            # restores scatter FIRST: a same-boundary fresh admission
+            # may trie-share a restore-range page (full-chunk entries
+            # are matchable pre-ready by design), so its prefill must
+            # only dispatch after the host image is back on device.
+            # The reverse order is safe — a restore reads nothing at
+            # scatter time; its aliased pages are only attended at
+            # the next segment, after every boundary dispatch.
+            for req in restored:
+                if restore_fault:
+                    failed_admissions.append(("restore", req))
                     continue
-            # the boundary checkpoint: everything committed as of this
-            # instant is exactly what the device pages back — the
-            # watermark every later rollback truncates to
-            rec.checkpoint(sched.running.values())
-            # activity is a pure function of scheduler state: stalled
-            # slots sit a segment out (their frozen write slot stays
-            # inside pages they own), everyone else runs to max_new.
-            # The feed token is re-derived from committed state, not the
-            # segment carry: an inactive slot's carry is masked to 0
-            # in-graph, so a slot coming back from a stalled segment
-            # would otherwise resume from a zero token (for healthy
-            # active slots tokens[-1] IS the carried token, so this is
-            # an identity)
-            for slot, req in sched.running.items():
-                active[slot] = (not req.stalled) \
-                    and n_gen[slot] < max_new[slot]
-                tok[slot] = req.tokens[-1]
+                try:
+                    if faults is not None:
+                        faults.gate("dispatch_restore")
+                    self.cache, n_disp = engine._restore(self.cache, bt,
+                                                         req)
+                except InjectedFault:
+                    restore_fault = True
+                    failed_admissions.append(("restore", req))
+                    continue
+                self.n_restore_dispatches += n_disp
+                slot = req.slot
+                seq_lens[slot] = req.swap.n_tokens
+                self.tok[slot] = req.tokens[-1]
+                self.n_gen[slot] = len(req.tokens)
+                self.max_new[slot] = req.max_new_tokens
+                ok_admitted.append(req)
+            if restore_fault:
+                # conservative: a fresh admission may prefix-share a
+                # page in the failed restore's range — without the
+                # host image resident, its prefill would attend
+                # garbage.  The boundary's remaining admissions all
+                # unwind and retry.
+                failed_admissions.extend(("admission", r)
+                                         for r in fresh)
+            elif fresh and engine.prefill_mode == "batched":
+                self.cache, tok1, n_disp, failed = engine._admit_batched(
+                    self.cache, bt, fresh, self.params, faults)
+                for req in fresh:
+                    if req.slot in tok1:
+                        self._start_request(req, tok1[req.slot], clock())
+                        ok_admitted.append(req)
+                failed_admissions.extend(("admission", r)
+                                         for r in failed)
+                self.n_prefill_dispatches += n_disp
+            elif fresh:
+                admit_fault = False
+                for req in fresh:
+                    if admit_fault:
+                        failed_admissions.append(("admission", req))
+                        continue
+                    try:
+                        if faults is not None:
+                            faults.gate("dispatch_admit")
+                        self.cache, first = engine._admit_serial(
+                            self.cache, bt, req, self.params)
+                    except InjectedFault:
+                        admit_fault = True
+                        failed_admissions.append(("admission", req))
+                        continue
+                    self._start_request(req, first, clock())
+                    self.n_prefill_dispatches += 1
+                    ok_admitted.append(req)
+            sched.finish_boundary(ok_admitted)
+            for kind, req in failed_admissions:
+                self._unwind_admission(kind, req)
+            self.prefill_s += time.perf_counter() - t_pf
+        self._retire_finished(clock())
+        if not sched.running:
+            return "idle"
+        if self.policy.check_invariants:
+            # opt-in boundary audit of the state the dispatches are
+            # about to trust; a violating request is quarantined as
+            # a full restart (its pages are suspect) instead of
+            # crashing the engine
+            bad, _glob = rec.check_invariants(bt, seq_lens)
+            for req, why in bad:
+                now2 = clock()
+                try:
+                    sched.rm.release_request(req)
+                except AllocatorError:
+                    # the ledger itself is inconsistent for this
+                    # request; shed what bookkeeping we can
+                    req.charged = 0
+                    req.pages = None
+                self._vacate(req)
+                rec.reset_for_restart(req)
+                rec.hold(req, f"invariant violation: {why}",
+                         boundary, now2, site="invariant")
+            if not sched.running:
+                return "idle"
+        # the boundary checkpoint: everything committed as of this
+        # instant is exactly what the device pages back — the
+        # watermark every later rollback truncates to
+        rec.checkpoint(sched.running.values())
+        # activity is a pure function of scheduler state: stalled
+        # slots sit a segment out (their frozen write slot stays
+        # inside pages they own), everyone else runs to max_new.
+        # The feed token is re-derived from committed state, not the
+        # segment carry: an inactive slot's carry is masked to 0
+        # in-graph, so a slot coming back from a stalled segment
+        # would otherwise resume from a zero token (for healthy
+        # active slots tokens[-1] IS the carried token, so this is
+        # an identity)
+        for slot, req in sched.running.items():
+            self.active[slot] = (not req.stalled) \
+                and self.n_gen[slot] < self.max_new[slot]
+            self.tok[slot] = req.tokens[-1]
 
-            poison = np.zeros((r,), np.float32)
-            if faults is not None and faults.should_fire("decode_poison"):
-                live = [s for s in sched.running if active[s]]
-                if live:
-                    poison[min(live)] = np.nan
-            try:
-                if faults is not None:
-                    faults.gate("dispatch_segment")
-            except InjectedFault:
-                # segment skipped wholesale: no state moved, nothing to
-                # roll back — the boundary simply retries.  Bounded by
-                # the plan's max_fires.
-                rec.segment_dispatch_faults += 1
-                continue
-            t_seg = timer()
-            cache = dict(cache, block_tables=jnp.asarray(bt),
-                         seq_lens=jnp.asarray(seq_lens))
-            cache, tok_d, act_d, gen_d, toks, emits, pois_d = \
-                self._segment(params, cache, jnp.asarray(tok),
-                              jnp.asarray(active), jnp.asarray(n_gen),
-                              jnp.asarray(max_new), jnp.asarray(poison))
-            n_segments += 1
-            toks = np.asarray(toks)
-            decode_s += timer() - t_seg
-            emits = np.asarray(emits)
-            # np.array (copy): host bookkeeping mutates these in place
-            tok = np.array(tok_d)
-            active = np.array(act_d)
-            n_gen = np.array(gen_d)
-            seq_lens = np.array(cache["seq_lens"])
-            poisoned = np.asarray(pois_d)
-            for slot, req in sched.running.items():
-                req.tokens.extend(
-                    int(t) for t in toks[emits[:, slot], slot])
-            # anti-livelock: surviving one generated segment makes a
-            # request preemptable again
-            sched.end_segment(slot for slot in sched.running
-                              if emits[:, slot].any())
-            # NaN/inf logit guard, before retirement: a poisoned slot
-            # stopped emitting in-graph and must never retire garbage —
-            # it rolls back to this boundary's checkpoint and retries
-            for slot in [s for s in list(sched.running) if poisoned[s]]:
-                quarantine_running(sched.running[slot],
-                                   "non-finite decode logits")
-            if emits.any() or admitted or preempted:
-                no_progress = 0
-            else:
-                # unreachable by the liveness argument in resources.py
-                # (a stall implies an unprotected victim exists, and
-                # protected requests are freshly provisioned to run) —
-                # fail loudly rather than spin if a policy bug lands
-                stall_guard()
-            retire_finished(timer() - t0)
+        poison = np.zeros((self.pcfg.max_slots,), np.float32)
+        if faults is not None and faults.should_fire("decode_poison"):
+            live = [s for s in sched.running if self.active[s]]
+            if live:
+                poison[min(live)] = np.nan
+        try:
+            if faults is not None:
+                faults.gate("dispatch_segment")
+        except InjectedFault:
+            # segment skipped wholesale: no state moved, nothing to
+            # roll back — the boundary simply retries.  Bounded by
+            # the plan's max_fires.
+            rec.segment_dispatch_faults += 1
+            return "skipped"
+        t_seg = time.perf_counter()
+        cache = dict(self.cache, block_tables=jnp.asarray(bt),
+                     seq_lens=jnp.asarray(seq_lens))
+        cache, tok_d, act_d, gen_d, toks, emits, pois_d = \
+            engine._segment(self.params, cache, jnp.asarray(self.tok),
+                            jnp.asarray(self.active),
+                            jnp.asarray(self.n_gen),
+                            jnp.asarray(self.max_new),
+                            jnp.asarray(poison))
+        self.cache = cache
+        self.n_segments += 1
+        toks = np.asarray(toks)
+        self.decode_s += time.perf_counter() - t_seg
+        emits = np.asarray(emits)
+        # np.array (copy): host bookkeeping mutates these in place
+        self.tok = np.array(tok_d)
+        self.active = np.array(act_d)
+        self.n_gen = np.array(gen_d)
+        self.seq_lens = seq_lens = np.array(cache["seq_lens"])
+        poisoned = np.asarray(pois_d)
+        for slot, req in sched.running.items():
+            req.tokens.extend(
+                int(t) for t in toks[emits[:, slot], slot])
+        # anti-livelock: surviving one generated segment makes a
+        # request preemptable again
+        sched.end_segment(slot for slot in sched.running
+                          if emits[:, slot].any())
+        # NaN/inf logit guard, before retirement: a poisoned slot
+        # stopped emitting in-graph and must never retire garbage —
+        # it rolls back to this boundary's checkpoint and retries
+        for slot in [s for s in list(sched.running) if poisoned[s]]:
+            self._quarantine_running(sched.running[slot],
+                                     "non-finite decode logits",
+                                     site="decode_poison")
+        if emits.any() or admitted or preempted:
+            self.no_progress = 0
+        else:
+            # unreachable by the liveness argument in resources.py
+            # (a stall implies an unprotected victim exists, and
+            # protected requests are freshly provisioned to run) —
+            # fail loudly rather than spin if a policy bug lands
+            self.note_stall()
+        self._retire_finished(clock())
+        return "ran"
 
-        out = {"n_segments": n_segments,
-               "n_admitted": sched.n_admitted,
-               "n_finished": len(sched.finished),
-               "n_dead_lettered": len(rec.dead),
-               "n_prefill_dispatches": n_prefill_dispatches,
-               "n_restore_dispatches": n_restore_dispatches,
-               "prefill_s": prefill_s,    # summed admission dispatches
-               "decode_s": decode_s,      # summed segment dispatches
-               "wall_s": timer() - t0,
-               "recovery": rec.stats(),
-               **sched.stats()}
-        if faults is not None:
-            out["faults"] = faults.summary()
+    # ------------------------------------------------------------- drain
+    def evacuate(self) -> list[Request]:
+        """Empty the run for a graceful drain: preempt every running
+        request through the ordinary host-swap machinery (the device is
+        healthy, so every image is captured and CRC'd), then hand back
+        everything queued and quarantined.  After this the run holds no
+        requests and its pool is back to free + retention pins; the
+        caller (cluster drain/rolling restart) re-routes the returned
+        requests to other replicas."""
+        out: list[Request] = []
+        for slot in sorted(self.sched.running):
+            req = self.sched.running[slot]
+            swap = self.sched.rm.preempt(req, requeue=False)
+            self.engine._swap_out(self.cache, swap, self.faults)
+            req.n_preempted += 1
+            self._vacate(req)
+            out.append(req)
+        out.extend(self.sched.rm.drain_queued())
+        out.extend(self.rec.drain_quarantined())
+        return out
+
+    # ------------------------------------------------------------ result
+    def result(self) -> dict:
+        out = {"n_segments": self.n_segments,
+               "n_admitted": self.sched.n_admitted,
+               "n_finished": len(self.sched.finished),
+               "n_dead_lettered": len(self.rec.dead),
+               "n_prefill_dispatches": self.n_prefill_dispatches,
+               "n_restore_dispatches": self.n_restore_dispatches,
+               "prefill_s": self.prefill_s,   # summed admission work
+               "decode_s": self.decode_s,     # summed segment dispatches
+               "wall_s": self.clock(),
+               "recovery": self.rec.stats(),
+               **self.sched.stats()}
+        if self.faults is not None:
+            out["faults"] = self.faults.summary()
         return out
 
 

@@ -48,8 +48,21 @@ import numpy as np
 #   dispatch_admit   an admission prefill dispatch raises InjectedFault
 #   dispatch_restore a restore scatter dispatch raises InjectedFault
 #   dispatch_segment the decode segment dispatch raises InjectedFault
-SITES = ("alloc", "swap_corrupt", "swap_loss", "decode_poison",
-         "dispatch_admit", "dispatch_restore", "dispatch_segment")
+ENGINE_SITES = ("alloc", "swap_corrupt", "swap_loss", "decode_poison",
+                "dispatch_admit", "dispatch_restore", "dispatch_segment")
+# Replica-level sites, probed by the cluster loop (serving/cluster.py)
+# once per live replica per round — never inside a single engine run:
+#   replica_crash    the replica's device state is destroyed; its host
+#                    loop stops stepping and its heartbeats cease
+#   replica_hang     the replica stops stepping indefinitely (heartbeats
+#                    cease) but nothing is destroyed — indistinguishable
+#                    from a crash to the health model, which is the point
+#   heartbeat_loss   one round's heartbeat is dropped while the replica
+#                    keeps stepping — exercises false-positive resilience
+#                    (a healthy replica marked SUSPECT must recover, and
+#                    one fenced DEAD must stay fenced)
+REPLICA_SITES = ("replica_crash", "replica_hang", "heartbeat_loss")
+SITES = ENGINE_SITES + REPLICA_SITES
 FAULT_SITES = SITES                     # package-level export alias
 
 

@@ -78,12 +78,28 @@ class EngineStalledError(RuntimeError):
 class RequestFailed:
     """Typed terminal state of a dead-lettered request (attached as
     ``Request.failure``; the request is *not* in ``scheduler.finished``).
+
+    ``site`` names the last fault site that drove the request under
+    (a :data:`~repro.serving.faults.SITES` name where the origin is
+    known, a recovery-layer tag like ``"shed"``/``"invariant"`` where it
+    is not) and ``ckpt_tokens`` is the boundary-checkpoint watermark the
+    request had committed when it died — together with ``tenant`` and
+    ``retries`` this is the structured record ``RecoveryManager.stats()``
+    exports per dead letter.
     """
     rid: Any
     tenant: str
     reason: str
     boundary: int                       # boundary index at dead-letter
     retries: int
+    site: str = "unknown"               # last fault site (or policy tag)
+    ckpt_tokens: int = 0                # committed tokens at death
+
+    def record(self) -> dict:
+        """JSON-safe dict for bench rows / telemetry."""
+        return {"rid": self.rid, "tenant": self.tenant, "site": self.site,
+                "reason": self.reason, "boundary": self.boundary,
+                "retries": self.retries, "ckpt_tokens": self.ckpt_tokens}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,7 +175,7 @@ class RecoveryManager:
         return int(min(b, self.policy.max_backoff_segments))
 
     def hold(self, req: "Request", reason: str, boundary: int,
-             now: float) -> bool:
+             now: float, site: str = "unknown") -> bool:
         """Quarantine ``req`` (already off-slot, pages released): bump
         its retry count and either park it for its backoff or dead-letter
         it when retries are exhausted.  Returns False on dead-letter."""
@@ -169,7 +185,7 @@ class RecoveryManager:
             self.restarts += 1
         if req.n_retries > self.policy.max_retries:
             self.dead_letter(req, f"retries exhausted after {reason}",
-                             boundary, now)
+                             boundary, now, site=site)
             return False
         self._quarantine.append((req, boundary + self.backoff(req)))
         return True
@@ -186,6 +202,15 @@ class RecoveryManager:
         for req, _ in due:
             self.rm.requeue(req)
         return len(due)
+
+    def drain_quarantined(self) -> "list[Request]":
+        """Empty the quarantine pen (replica drain/failover): the cluster
+        migrates these requests to another replica, backoff forgiven —
+        the faulting engine is gone, so there is nothing to back off
+        from."""
+        out = [req for req, _ in self._quarantine]
+        self._quarantine = []
+        return out
 
     def reset_for_restart(self, req: "Request") -> None:
         """Strip a request back to as-submitted: no swap image, no
@@ -205,11 +230,12 @@ class RecoveryManager:
 
     # -------------------------------------------------------- dead letter
     def dead_letter(self, req: "Request", reason: str, boundary: int,
-                    now: float) -> None:
+                    now: float, site: str = "unknown") -> None:
         req.swap = None
         req.failure = RequestFailed(rid=req.rid, tenant=req.tenant,
                                     reason=reason, boundary=boundary,
-                                    retries=req.n_retries)
+                                    retries=req.n_retries, site=site,
+                                    ckpt_tokens=req.ckpt_tokens)
         req.t_done = now
         self.rm.state(req.tenant).dead_lettered += 1
         self.rm.dead_letters += 1
@@ -228,14 +254,17 @@ class RecoveryManager:
                 sw = req.swap
                 if sw is not None and not sw.verified:
                     sw.verified = True
-                    ok = sw.host_k is not None and sw.host_v is not None \
-                        and (sw.checksum is None or sw.checksum ==
-                             image_checksum(sw.host_k, sw.host_v))
+                    lost = sw.host_k is None or sw.host_v is None
+                    ok = not lost and (sw.checksum is None or sw.checksum
+                                       == image_checksum(sw.host_k,
+                                                         sw.host_v))
                     if not ok:
                         self.swap_faults_detected += 1
                         self.reset_for_restart(req)
                         self.hold(req, "swap image corrupt or lost",
-                                  boundary, now)
+                                  boundary, now,
+                                  site="swap_loss" if lost
+                                  else "swap_corrupt")
                         converted += 1
                         continue
                 keep.append(req)
@@ -266,7 +295,7 @@ class RecoveryManager:
                         self.dead_letter(
                             req, f"shed after {boundary - first} "
                             f"boundaries queued under pressure",
-                            boundary, now)
+                            boundary, now, site="shed")
                         self.shed += 1
                         n += 1
                     else:
@@ -324,6 +353,11 @@ class RecoveryManager:
                 "segment_dispatch_faults": self.segment_dispatch_faults,
                 "shed": self.shed,
                 "dead_lettered": len(self.dead),
+                # structured per-request terminal records (site, tenant,
+                # retries, checkpoint) — the bench/telemetry view of WHY
+                # each dead letter died, not just how many did
+                "dead_letter_records": [req.failure.record()
+                                        for req in self.dead],
                 "invariant_violations": list(self.invariant_violations)}
 
 

@@ -247,6 +247,23 @@ class ResourceManager:
     def has_queued(self) -> bool:
         return any(st.has_queued for st in self._tenants.values())
 
+    def drain_queued(self) -> list["Request"]:
+        """Pop every queued request (both lanes, all tenants, restores
+        first) and zero the DRR credit.  The cluster's drain/failover
+        path migrates the returned requests to another replica; nothing
+        queued holds pages, so no allocator state moves."""
+        out: list[Request] = []
+        for name in sorted(self._tenants):
+            st = self._tenants[name]
+            out.extend(st.preempted)
+            st.preempted = deque()
+        for name in sorted(self._tenants):
+            st = self._tenants[name]
+            out.extend(st.pending)
+            st.pending = deque()
+            st.deficit = 0.0
+        return out
+
     # ------------------------------------------------------------- sizing
     def lifetime_pages(self, req: "Request") -> int:
         return self.pcfg.pages_for(

@@ -164,14 +164,23 @@ class ContinuousBatchingScheduler:
         return preempted
 
     def _preempt(self, victim: Request) -> None:
-        slot = victim.slot
         self.rm.preempt(victim)           # snapshot + release + requeue
         victim.n_preempted += 1
-        victim.stalled = False
-        victim.slot = None
+        self.vacate(victim)
+
+    def vacate(self, req: Request) -> int:
+        """Free a request's slot without completing it — the
+        scheduler-side half of emptying a slot, shared by preemption,
+        fault quarantine, and drain evacuation (the engine parks the
+        device row on the scratch page).  Returns the freed slot."""
+        slot = req.slot
         del self.running[slot]
         self.free_slots.append(slot)
         self.free_slots.sort()
+        req.slot = None
+        req.stalled = False
+        req.protected = False
+        return slot
 
     # ----------------------------------------------------------- admission
     def try_admit(self) -> list[Request]:

@@ -1,0 +1,272 @@
+"""Replicated serving cluster: health model, prefix-affinity routing,
+cross-replica failover (image migration vs. restart), drain/rejoin, and
+the typed ReplicaLost dead-letter path.  The cross-cutting invariant in
+every end-to-end test: cluster tokens are bit-identical to the same
+requests served by one engine run (greedy decode is deterministic and
+batch-invariant, so routing and failover must never show up in the
+output stream)."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.serving import (FaultPlan, HealthPolicy, PagedCacheConfig,
+                           PagedServingEngine, RecoveryPolicy,
+                           ReplicaLost, Request, RequestFailed,
+                           ServingCluster, TenantConfig)
+from repro.serving.cluster import DEAD, DOWN, HEALTHY, SUSPECT
+
+_C = {}
+
+
+def _cluster_fixture():
+    """One compiled engine shared by every test in the file (replicas
+    multiply run-state, not compilations)."""
+    if not _C:
+        from repro.configs.registry import get_config
+        from repro.models.api import build_model
+        cfg = get_config("qwen2_7b", smoke=True)
+        model = build_model(cfg)
+        pcfg = PagedCacheConfig(page_size=8, n_pages=24, max_slots=4,
+                                max_blocks=6, segment_len=4,
+                                retain_pages=4)
+        eng = PagedServingEngine(
+            model, pcfg, tenants=[TenantConfig("a"), TenantConfig("b")])
+        _C["x"] = (cfg, model.init(jax.random.PRNGKey(0)), eng)
+    return _C["x"]
+
+
+def _mk_reqs(cfg, n=6, gen=12):
+    from repro.data.synthetic import lm_tokens
+    return [Request(rid=i, prompt=np.asarray(
+                lm_tokens(16, cfg.vocab_size, seed=40 + i)
+            ).astype(np.int32), max_new_tokens=gen,
+            tenant="a" if i % 2 else "b") for i in range(n)]
+
+
+def _baseline(cfg, params, eng):
+    if "base" not in _C:
+        reqs = _mk_reqs(cfg)
+        eng.run(reqs, params)
+        _C["base"] = {r.rid: list(r.tokens) for r in reqs}
+    return _C["base"]
+
+
+def _assert_pools_drained(cl):
+    """Survivor invariant: every non-fenced replica's pool back to
+    free + retention pins, ledger intact — failover leaked nothing."""
+    for rep in cl.replicas:
+        if rep.fenced:
+            continue
+        s = rep.run.sched.rm.stats()
+        assert s["free_pages"] + s["pinned_pages"] \
+            == rep.run.pcfg.allocatable_pages, (rep.name, s)
+        assert s["held_pages"] == s["pinned_pages"], (rep.name, s)
+
+
+# ------------------------------------------------------------ unit level
+class TestHealthPolicy:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            HealthPolicy(suspect_after=0)
+        with pytest.raises(ValueError):
+            HealthPolicy(suspect_after=5, dead_after=4)
+
+    def test_replica_lost_record_is_typed_and_structured(self):
+        f = ReplicaLost(rid=7, tenant="a", reason="gone", boundary=3,
+                        retries=2, site="replica_crash", ckpt_tokens=5,
+                        replica="r1")
+        assert isinstance(f, RequestFailed)
+        rec = f.record()
+        assert rec["replica"] == "r1" and rec["site"] == "replica_crash"
+        assert rec["ckpt_tokens"] == 5
+
+
+# ------------------------------------------------------------ end to end
+def test_fault_free_cluster_bit_identical_to_single_engine():
+    """Routing across 3 replicas is invisible in the token streams, and
+    the front door actually spread the load."""
+    cfg, params, eng = _cluster_fixture()
+    base = _baseline(cfg, params, eng)
+    cl = ServingCluster(eng, params, n_replicas=3)
+    reqs = _mk_reqs(cfg)
+    out = cl.run(reqs)
+    assert out["n_finished"] == len(reqs)
+    assert out["n_dead_lettered"] == 0
+    assert {r.rid: list(r.tokens) for r in reqs} == base
+    stepped = [v["n_segments"] for v in out["replicas"].values()]
+    assert sum(1 for s in stepped if s) >= 2    # load actually spread
+    _assert_pools_drained(cl)
+
+
+def test_replica_crash_mid_burst_recovers_bit_identical():
+    cfg, params, eng = _cluster_fixture()
+    base = _baseline(cfg, params, eng)
+    cl = ServingCluster(eng, params, n_replicas=3,
+                        faults=FaultPlan.at(replica_crash=1))
+    reqs = _mk_reqs(cfg)
+    out = cl.run(reqs)
+    assert out["faults"]["fired"] == [["replica_crash", 1]]
+    assert sum(1 for v in out["replicas"].values()
+               if v["state"] == DEAD) == 1
+    assert out["n_finished"] + out["n_dead_lettered"] == len(reqs)
+    for r in reqs:
+        if r.failure is None:
+            assert list(r.tokens) == base[r.rid]
+        else:
+            assert isinstance(r.failure, ReplicaLost)
+    _assert_pools_drained(cl)
+
+
+def test_replica_hang_detected_and_failed_over():
+    """A hang (host loop wedged, nothing destroyed) is indistinguishable
+    from a crash to the heartbeat model and takes the same salvage
+    path."""
+    cfg, params, eng = _cluster_fixture()
+    base = _baseline(cfg, params, eng)
+    cl = ServingCluster(eng, params, n_replicas=3,
+                        faults=FaultPlan.at(replica_hang=2))
+    reqs = _mk_reqs(cfg)
+    out = cl.run(reqs)
+    dead = [r for r in cl.replicas if r.state == DEAD]
+    assert len(dead) == 1 and dead[0].cause == "replica_hang"
+    assert out["n_finished"] + out["n_dead_lettered"] == len(reqs)
+    for r in reqs:
+        if r.failure is None:
+            assert list(r.tokens) == base[r.rid]
+    _assert_pools_drained(cl)
+
+
+def test_heartbeat_loss_is_transient_suspect_not_death():
+    """One dropped heartbeat with stepping intact never kills a replica:
+    it may dip to SUSPECT and must recover to HEALTHY on the next beat
+    (the false-positive resilience the thresholds buy)."""
+    cfg, params, eng = _cluster_fixture()
+    base = _baseline(cfg, params, eng)
+    cl = ServingCluster(eng, params, n_replicas=2,
+                        faults=FaultPlan.at(heartbeat_loss=0),
+                        health=HealthPolicy(suspect_after=1,
+                                            dead_after=4))
+    reqs = _mk_reqs(cfg)
+    out = cl.run(reqs)
+    assert out["n_finished"] == len(reqs)
+    assert out["n_dead_lettered"] == 0
+    assert all(v["state"] == HEALTHY
+               for v in out["replicas"].values())
+    assert {r.rid: list(r.tokens) for r in reqs} == base
+    _assert_pools_drained(cl)
+
+
+def test_drain_and_rejoin_rolling_restart():
+    """Graceful drain migrates everything out with zero retries burned,
+    the replica rejoins with a cold trie, and the tokens never notice."""
+    cfg, params, eng = _cluster_fixture()
+    base = _baseline(cfg, params, eng)
+    cl = ServingCluster(eng, params, n_replicas=3)
+    reqs = _mk_reqs(cfg)
+    seen = {}
+
+    def hook(c, rnd):
+        if rnd == 1:
+            seen["moved"] = c.drain("r0")
+            assert c._replica("r0").state == DOWN
+        if rnd == 2:
+            c.rejoin("r0")
+            assert c._replica("r0").state == HEALTHY
+
+    out = cl.run(reqs, on_round=hook)
+    assert seen["moved"] >= 1 and out["n_drained"] == seen["moved"]
+    assert out["n_finished"] == len(reqs)
+    assert out["n_dead_lettered"] == 0
+    assert all(r.n_retries == 0 for r in reqs)   # drain is free
+    assert {r.rid: list(r.tokens) for r in reqs} == base
+    # the rejoined replica is live and serves a follow-up wave
+    assert cl._replica("r0").live
+    wave2 = _mk_reqs(cfg)
+    out2 = cl.run(wave2)
+    assert out2["n_finished"] == out["n_finished"] + len(wave2)
+    assert {r.rid: list(r.tokens) for r in wave2} == base
+    _assert_pools_drained(cl)
+
+
+def test_exhausted_retries_dead_letter_typed_replica_lost():
+    """With zero retries allowed, in-flight work lost to a replica death
+    dead-letters as ReplicaLost naming the site and replica, while the
+    untouched replica's requests finish bit-identical."""
+    cfg, params, eng = _cluster_fixture()
+    base = _baseline(cfg, params, eng)
+    cl = ServingCluster(eng, params, n_replicas=2,
+                        recovery=RecoveryPolicy(max_retries=0))
+    reqs = _mk_reqs(cfg)
+
+    def hook(c, rnd):
+        if rnd == 2:
+            c.kill("r0")
+
+    out = cl.run(reqs, on_round=hook)
+    lost = [r for r in reqs if r.failure is not None]
+    assert lost and out["n_dead_lettered"] == len(lost)
+    for r in lost:
+        assert isinstance(r.failure, ReplicaLost)
+        assert r.failure.site == "replica_crash"
+        assert r.failure.replica == "r0"
+    recs = out["dead_letter_records"]
+    assert len(recs) == len(lost)
+    assert all(rec["replica"] == "r0" for rec in recs)
+    for r in reqs:
+        if r.failure is None:
+            assert list(r.tokens) == base[r.rid]
+    _assert_pools_drained(cl)
+
+
+def test_prefix_affinity_routes_to_warm_replica():
+    """A repeated prompt routes to the replica whose retained trie pages
+    already hold it — the second wave is an affinity hit."""
+    from repro.data.synthetic import lm_tokens
+    cfg, params, eng = _cluster_fixture()
+    shared = np.asarray(lm_tokens(16, cfg.vocab_size, seed=99)
+                        ).astype(np.int32)
+    cl = ServingCluster(eng, params, n_replicas=3)
+    cl.run([Request(rid="w", prompt=shared.copy(), max_new_tokens=4,
+                    tenant="a")])
+    cl.run([Request(rid="x", prompt=shared.copy(), max_new_tokens=4,
+                    tenant="a")])
+    fd = cl.front_door.stats()
+    assert fd["routed"] == 2 and fd["affinity_hits"] >= 1
+
+
+def test_all_replicas_lost_dead_letters_everything():
+    """No survivors: every request ends in a typed ReplicaLost (none
+    lost silently, the run still terminates)."""
+    cfg, params, eng = _cluster_fixture()
+    cl = ServingCluster(eng, params, n_replicas=2)
+    reqs = _mk_reqs(cfg, n=4)
+
+    def hook(c, rnd):
+        if rnd == 1:
+            c.kill("r0")
+            c.kill("r1")
+
+    out = cl.run(reqs, on_round=hook)
+    assert out["n_finished"] + out["n_dead_lettered"] == len(reqs)
+    assert all(r.failure is None or isinstance(r.failure, ReplicaLost)
+               for r in reqs)
+    assert all(r.t_done is not None for r in reqs)
+
+
+def test_engine_seeded_chaos_cluster_survives():
+    """Seeded chaos over BOTH engine and replica sites at once: the
+    cluster terminates with every request bit-identical or typed-dead-
+    lettered and no survivor leaks a page."""
+    cfg, params, eng = _cluster_fixture()
+    base = _baseline(cfg, params, eng)
+    plan = FaultPlan.seeded(11, rate=0.15, max_fires=2)
+    cl = ServingCluster(eng, params, n_replicas=3, faults=plan)
+    reqs = _mk_reqs(cfg)
+    out = cl.run(reqs)
+    assert out["n_finished"] + out["n_dead_lettered"] == len(reqs)
+    for r in reqs:
+        if r.failure is None:
+            assert list(r.tokens) == base[r.rid], \
+                f"rid {r.rid} diverged after faults {plan.log}"
+    _assert_pools_drained(cl)

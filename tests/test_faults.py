@@ -12,11 +12,12 @@ import jax
 import pytest
 
 from repro.serving import (AllocatorError, ContinuousBatchingScheduler,
-                           EngineStalledError, FAULT_SITES, FaultPlan,
-                           FaultSpec, InjectedFault, PageAllocator,
-                           PagedCacheConfig, RecoveryManager,
-                           RecoveryPolicy, Request, RequestFailed,
-                           SwapState, diagnostic_snapshot)
+                           ENGINE_SITES, EngineStalledError, FAULT_SITES,
+                           FaultPlan, FaultSpec, InjectedFault,
+                           PageAllocator, PagedCacheConfig,
+                           RecoveryManager, RecoveryPolicy, Request,
+                           RequestFailed, SwapState,
+                           diagnostic_snapshot)
 from repro.serving.faults import corrupt_image, image_checksum
 
 
@@ -311,10 +312,12 @@ def _baseline(cfg, params, eng):
     return _ENG["base"]
 
 
-@pytest.mark.parametrize("site", FAULT_SITES)
+@pytest.mark.parametrize("site", ENGINE_SITES)
 def test_engine_recovers_bit_identical(site):
-    """A fault injected at every site in the stack: run() never raises,
-    every request completes, and the tokens equal the fault-free run."""
+    """A fault injected at every engine-level site in the stack: run()
+    never raises, every request completes, and the tokens equal the
+    fault-free run.  (Replica-level sites have no opportunities inside a
+    single engine run — tests/test_cluster.py covers them.)"""
     cfg, params, eng = _engine()
     base = _baseline(cfg, params, eng)
     reqs = _mk_reqs(cfg)

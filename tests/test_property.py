@@ -365,6 +365,77 @@ def test_engine_chaos_recovers_or_dead_letters(fault_seed, gens, data):
     assert out["held_pages"] == out["pinned_pages"]
 
 
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2 ** 20),
+       st.lists(st.integers(2, 8), min_size=3, max_size=6),
+       st.data())
+def test_cluster_replica_loss_rejoin_no_request_lost(seed, gens, data):
+    """Replicated-serving accounting invariant: random kill/drain/rejoin
+    interleavings against a random 2-3-tenant stream through the real
+    FrontDoor terminate with every request in exactly one terminal state
+    (finished on exactly one replica, or typed-dead-lettered) and every
+    surviving replica's pool drained back to free + retention pins."""
+    from repro.data.synthetic import lm_tokens
+    from repro.serving import (PagedCacheConfig, PagedServingEngine,
+                               Request, ServingCluster, TenantConfig)
+    if "cluster" not in _SERVE:
+        _serve_engine(4, 7)                      # populate the model cache
+        _, model, _ = _SERVE["model"]
+        pcfg = PagedCacheConfig(page_size=8, n_pages=12, max_slots=2,
+                                max_blocks=4, segment_len=4)
+        _SERVE["cluster"] = PagedServingEngine(
+            model, pcfg, tenants=[TenantConfig("a"), TenantConfig("b"),
+                                  TenantConfig("c", weight=2.0)])
+    cfg, _, params = _SERVE["model"]
+    cl = ServingCluster(_SERVE["cluster"], params, n_replicas=3)
+    names = [r.name for r in cl.replicas]
+    schedule = {rnd: (data.draw(st.sampled_from(
+                          ["none", "kill", "drain", "rejoin"]),
+                          label=f"action[{rnd}]"),
+                      data.draw(st.sampled_from(names),
+                                label=f"target[{rnd}]"))
+                for rnd in range(1, 6)}
+    tenants = [data.draw(st.sampled_from(["a", "b", "c"]),
+                         label=f"tenant[{i}]") for i in range(len(gens))]
+    reqs = [Request(rid=i, prompt=np.asarray(
+                lm_tokens(16, cfg.vocab_size, seed=40 + i)
+            ).astype(np.int32), max_new_tokens=g, tenant=t)
+            for i, (g, t) in enumerate(zip(gens, tenants))]
+
+    def on_round(c, rnd):
+        action, target = schedule.get(rnd, ("none", ""))
+        rep = c._replica(target) if action != "none" else None
+        if action == "kill" and rep.live and not rep.crashed:
+            c.kill(target)
+        elif action == "drain" and rep.live \
+                and not (rep.crashed or rep.hung):
+            c.drain(target)
+        elif action == "rejoin" and not rep.live:
+            c.rejoin(target)
+
+    out = cl.run(reqs, on_round=on_round)
+    finished = cl.finished
+    dead = cl.dead_lettered
+    # exactly-once terminal accounting: no request lost, none duplicated
+    assert len({r.rid for r in finished}) == len(finished)
+    assert {r.rid for r in finished} | {r.rid for r in dead} \
+        == {r.rid for r in reqs}
+    assert not ({r.rid for r in finished} & {r.rid for r in dead})
+    assert out["n_finished"] + out["n_dead_lettered"] == len(reqs)
+    for r in reqs:
+        assert r.t_done is not None              # every request terminal
+        if r.failure is None:
+            assert len(r.tokens) == r.max_new_tokens
+    # survivor pools drain to full (free + retention pins), ledger intact
+    for rep in cl.replicas:
+        if rep.fenced:
+            continue
+        s = rep.run.sched.rm.stats()
+        assert s["free_pages"] + s["pinned_pages"] \
+            == rep.run.pcfg.allocatable_pages, (rep.name, s)
+        assert s["held_pages"] == s["pinned_pages"], (rep.name, s)
+
+
 # ---------------------------------------------------- binary search props
 @SETTINGS
 @given(st.floats(0.05, 0.95), st.sampled_from([0.01, 0.02, 0.05]))
