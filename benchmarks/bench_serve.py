@@ -158,21 +158,26 @@ LOAD_PROMPT, LOAD_GEN = 32, 16
 LOAD_SLOTS = 8                  # in-flight batch width = the 8-concurrent row
 LOAD_BURST = 8                  # requests in the burst (acceptance) row
 LOAD_POISSON_N = 10             # requests per Poisson row
+POISSON_SEED = 7                # default Poisson-row profile seed (--seed)
 
 
 def _load_requests(cfg, n, seed):
-    from repro.data.synthetic import lm_tokens
-    from repro.serving import Request
-    prompts = np.asarray(
-        lm_tokens(n * LOAD_PROMPT, cfg.vocab_size, seed=seed)
-    ).reshape(n, LOAD_PROMPT).astype(np.int32)
-    return [Request(rid=i, prompt=prompts[i], max_new_tokens=LOAD_GEN)
-            for i in range(n)]
+    # one TrafficProfile expansion — the same entry point the SERVE
+    # task's replay scorer uses, so bench rows and searched plans are
+    # measured on identical request streams
+    from repro.serving.traffic import TrafficProfile
+    return TrafficProfile(name=f"load{n}", n_requests=n,
+                          prompt_len=LOAD_PROMPT,
+                          max_new_tokens=LOAD_GEN,
+                          seed=seed).requests(cfg.vocab_size)
 
 
-def _poisson_arrivals(n, rate, seed):
-    rng = np.random.default_rng(seed)
-    return np.cumsum(rng.exponential(1.0 / rate, size=n)).tolist()
+def _poisson_profile(tag, rate, seed):
+    from repro.serving.traffic import TrafficProfile
+    return TrafficProfile(name=f"poisson_{tag}",
+                          n_requests=LOAD_POISSON_N, arrival_rate=rate,
+                          prompt_len=LOAD_PROMPT,
+                          max_new_tokens=LOAD_GEN, seed=seed)
 
 
 def _single_stream(model, fns, params, reqs):
@@ -216,7 +221,9 @@ def _paged(engine, params, reqs):
         {r.rid: list(r.tokens) for r in reqs}
 
 
-def _bench_load() -> dict:
+def _bench_load(profile=None, seed: int = POISSON_SEED) -> dict:
+    import dataclasses
+
     from repro.configs.registry import get_config
     from repro.launch.serve import generate, make_serve_fns
     from repro.models.api import build_model
@@ -288,23 +295,32 @@ def _bench_load() -> dict:
         "tokens_equal_oracle": tokens_equal})
 
     # Poisson rows: rates relative to the measured single-stream service
-    # capacity (machine-adaptive, seeded arrival patterns)
+    # capacity (machine-adaptive, seeded arrival patterns).  An explicit
+    # --profile overrides the request mix (count, prefix share, tenants,
+    # seed, and — when it sets one — the arrival rate); prompt/gen are
+    # pinned to the bench geometry the engine pool was warmed for.
     service_rate = LOAD_BURST / base_row["wall_s"]        # req/s
     for tag, factor in (("underload", 0.75), ("overload", 1.5)):
         rate = factor * service_rate
+        if profile is not None:
+            prof = dataclasses.replace(
+                profile, name=f"{profile.name}_{tag}",
+                arrival_rate=profile.arrival_rate or rate,
+                prompt_len=LOAD_PROMPT, max_new_tokens=LOAD_GEN)
+        else:
+            prof = _poisson_profile(tag, rate, seed)
         for name, runner in (("single_stream",
                               lambda rq: _single_stream(model, fns,
                                                         params, rq)),
                              ("paged",
                               lambda rq: _paged(engine, params, rq))):
-            reqs = _load_requests(cfg, LOAD_POISSON_N, 7)
-            arrivals = _poisson_arrivals(LOAD_POISSON_N, rate, seed=13)
-            for r, a in zip(reqs, arrivals):
-                r.arrival = a
+            reqs = prof.requests(cfg.vocab_size,
+                                 page_size=pcfg.page_size)
             row, _ = runner(reqs)
-            suite["rows"].append({"load": f"poisson_{tag}",
-                                  "rate_req_s": rate, "path": name,
-                                  **row})
+            suite["rows"].append({"load": prof.name,
+                                  "rate_req_s": prof.arrival_rate,
+                                  "profile": prof.to_dict(),
+                                  "path": name, **row})
 
     suite["verdict"] = {
         "paged_2x_at_8_concurrent": speedup >= 2.0,
@@ -777,7 +793,30 @@ def _bench_prefix(cfg, model, params) -> dict:
     }
 
 
-def main():
+def main(argv=None):
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(
+        description="serving-path benchmark suite")
+    ap.add_argument("--seed", type=int, default=POISSON_SEED,
+                    help="profile seed for the Poisson load rows "
+                         "(prompts = seed, arrivals = seed + 1)")
+    ap.add_argument("--profile", type=str, default=None,
+                    help="path to a TrafficProfile JSON "
+                         "(serving/traffic.py) overriding the Poisson "
+                         "rows' request mix — the SERVE design-flow "
+                         "task's stage-2 scorer and CI share this "
+                         "entry point")
+    # run.py invokes main() programmatically: only a __main__ launch
+    # (which passes sys.argv[1:] explicitly) reads the command line
+    args = ap.parse_args(argv if argv is not None else [])
+    profile = None
+    if args.profile:
+        from repro.serving.traffic import TrafficProfile
+        with open(args.profile) as f:
+            profile = TrafficProfile.from_dict(json.load(f))
+
     results = {"backend": jax.default_backend(), "t": time.time(),
                "shapes": []}
     for arch, batch, prompt_len, gen in SERVE_SHAPES:
@@ -798,7 +837,7 @@ def main():
              f"not_slower_than_seed={int(row['not_slower_than_seed'])};"
              f"samples_agree={int(row['samples_agree'])}")
 
-    load = _bench_load()
+    load = _bench_load(profile=profile, seed=args.seed)
     results["load"] = load
     for r in load["rows"]:
         if "paged_decode_speedup" in r:
@@ -921,4 +960,6 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(sys.argv[1:])

@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_roofline -> §Roofline rows from the dry-run sweeps
   bench_serve    -> serving trajectory (prefill/decode tok/s; scan'd
                     flash-decode vs the seed Python-loop jnp path)
+  bench_serveflow-> T→V design flow (TUNE → SERVE staged plan search;
+                    searched plan gated >= the hand-assembled default)
   bench_chaos    -> self-healing smoke (fixed-seed fault injection
                     through the paged engine; token-identity gated)
   bench_cluster  -> replicated-serving smoke (replica crash mid-burst
@@ -37,6 +39,9 @@ SUITES = {
                  "roofline rows from the dry-run sweeps"),
     "serve": ("bench_serve",
               "paged serving engine: throughput, load, tenants, chaos"),
+    "serveflow": ("bench_serveflow",
+                  "T→V design flow: staged ServingPlan search, gated "
+                  "searched>=default, emits the deployable plan JSON"),
     "chaos": ("bench_chaos",
               "self-healing smoke: fixed-seed faults, token-identity "
               "gated, boundary invariant audit armed"),
@@ -45,8 +50,10 @@ SUITES = {
                 "and zero-leak gated, affinity reported"),
 }
 # these rows already ride inside (or duplicate the engine build of) the
-# serve suite: running them by default would pay for the build twice
-NOT_IN_DEFAULT = ("chaos", "cluster")
+# serve suite: running them by default would pay for the build twice.
+# serveflow re-runs TUNE + engine builds as part of the flow under test,
+# so it is likewise its own CI step rather than a default rider.
+NOT_IN_DEFAULT = ("chaos", "cluster", "serveflow")
 
 
 def _suite_listing() -> str:

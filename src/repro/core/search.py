@@ -127,6 +127,56 @@ def exhaustive_search(candidates: Sequence[Any],
     return SearchResult(best_x, best_obj, steps)
 
 
+def staged_search(candidates: Sequence[Any],
+                  stage1: Callable[[Any], tuple[bool, float, dict]],
+                  stage2: Callable[[Any], tuple[bool, float, dict]],
+                  *, keep: int | None = None, keep_frac: float = 0.5,
+                  must_keep: Sequence[int] = ()) -> SearchResult:
+    """Two-stage pruned sweep (SERVE O-task; uptune's intermediate-feature
+    idiom).
+
+    Every candidate first runs ``stage1`` — a cheap proxy evaluation whose
+    info dict carries intermediate features — and only the top ``keep``
+    stage-1 survivors (feasible ones, ranked by stage-1 objective) pay for
+    the expensive ``stage2`` evaluation.  ``keep`` defaults to
+    ``ceil(keep_frac * len(candidates))``; indices in ``must_keep`` are
+    promoted to stage 2 unconditionally (the SERVE task pins its
+    hand-assembled default plan there so the searched winner is gated
+    against it on equal, stage-2 footing).
+
+    The step trace covers both stages (``info["stage"]`` ∈ {1, 2});
+    pruned candidates appear only as their stage-1 step.  The winner is
+    the feasible stage-2 candidate with the highest stage-2 objective
+    (ties: first seen wins).
+    """
+    steps: list[SearchStep] = []
+    scores: list[tuple[int, bool, float]] = []
+    for i, x in enumerate(candidates):
+        ok, obj, info = stage1(x)
+        steps.append(SearchStep(len(steps) + 1, x, obj, ok,
+                                {**info, "stage": 1}))
+        scores.append((i, ok, obj))
+    if keep is None:
+        keep = max(1, math.ceil(keep_frac * len(scores)))
+    ranked = sorted((s for s in scores if s[1]),
+                    key=lambda s: -s[2])
+    survivors = [i for i, _, _ in ranked[:keep]]
+    for i in must_keep:
+        if i not in survivors and 0 <= i < len(scores):
+            survivors.append(i)
+    survivors.sort()
+
+    best_x, best_obj = None, -math.inf
+    for i in survivors:
+        x = candidates[i]
+        ok, obj, info = stage2(x)
+        steps.append(SearchStep(len(steps) + 1, x, obj, ok,
+                                {**info, "stage": 2, "candidate": i}))
+        if ok and obj > best_obj:
+            best_x, best_obj = x, obj
+    return SearchResult(best_x, best_obj, steps)
+
+
 def greedy_lattice_descent(items: Sequence[str],
                            levels: Sequence[Any],
                            accept: Callable[[dict[str, Any]], tuple[bool, float, dict]],

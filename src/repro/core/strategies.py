@@ -22,11 +22,12 @@ from repro.tasks.model_gen import ModelGen
 from repro.tasks.pruning import Pruning
 from repro.tasks.quantization import Quantization
 from repro.tasks.scaling import Scaling
+from repro.tasks.serve import Serve
 from repro.tasks.sharding_search import ShardingSearch
 from repro.tasks.tune import Tune
 
 O_TASKS = {"P": Pruning, "S": Scaling, "Q": Quantization,
-           "H": ShardingSearch, "T": Tune}
+           "H": ShardingSearch, "T": Tune, "V": Serve}
 
 
 def pruning_strategy(model: str = "jet_dnn", **params) -> DesignFlow:
@@ -53,6 +54,23 @@ def tune_strategy(model: str = "jet_dnn", **params) -> DesignFlow:
     this model executes (kernels/autotune.py)."""
     flow = DesignFlow(f"tune({model})")
     flow.chain(ModelGen(model=model), Tune(**params))
+    return flow
+
+
+def serve_strategy(model: str = "qwen2-7b",
+                   model_params: dict | None = None,
+                   tune_params: dict | None = None,
+                   serve_params: dict | None = None) -> DesignFlow:
+    """MODEL-GEN → TUNE → SERVE (``T → V``): tune the Pallas tile
+    configs for the shapes this model executes, then search the joint
+    serving-plan space on a traffic profile — the deployment readbacks
+    (page size, segment cadence) flow from TUNE to SERVE through the
+    persisted autotune cache, and the winner ships as a ServingPlan JSON
+    artifact."""
+    flow = DesignFlow(f"serve({model})")
+    flow.chain(ModelGen(model=model, **(model_params or {})),
+               Tune(**(tune_params or {})),
+               Serve(**(serve_params or {})))
     return flow
 
 

@@ -820,11 +820,25 @@ def cached_config(kernel: str, problem: dict[str, Any], *,
     valid across the relaxation because kernels clamp tiles to the
     problem dims.
     """
+    cfg, _ = cached_config_info(kernel, problem, cache_path=cache_path,
+                                relax=relax)
+    return cfg
+
+
+def cached_config_info(kernel: str, problem: dict[str, Any], *,
+                       cache_path: str | None = None,
+                       relax: tuple[str, ...] = ()
+                       ) -> tuple[dict[str, int], str]:
+    """:func:`cached_config` plus where the answer came from: ``"tuned"``
+    (exact backend-matched hit), ``"relaxed"`` (nearest tuned entry over
+    the relaxed fields), or ``"default"`` (kernel default on a miss).
+    The provenance label is what a :class:`~repro.serving.plan.ServingPlan`
+    records per resolved knob."""
     path = cache_path or default_cache_path()
     entries = _load(path)["entries"]
     entry = entries.get(cache_key(kernel, problem))
     if entry is not None and entry.get("backend") == jax.default_backend():
-        return dict(entry["config"])
+        return dict(entry["config"]), "tuned"
     if relax:
         strict = {k: v for k, v in problem.items() if k not in relax}
         prefix = f"{kernel}|"
@@ -845,8 +859,34 @@ def cached_config(kernel: str, problem: dict[str, Any], *,
             if best is None or dist < best[0]:
                 best = (dist, e)
         if best is not None:
-            return dict(best[1]["config"])
-    return dict(KERNELS[kernel].default_config)
+            return dict(best[1]["config"]), "relaxed"
+    return dict(KERNELS[kernel].default_config), "default"
+
+
+# The one registry of relax keys per kernel: which problem fields a
+# serving-time readback may differ from the TUNE run's proxy problem in
+# (batch/slot count and cache length scale with deployment, tile choices
+# don't).  Every cached-config consumer — pool construction
+# (serving/plan.py resolve, paged_cache.preferred_*), the layer-dispatch
+# sites in models/layers.py, and TUNE's problem derivation — goes through
+# :func:`tile_readback` with this table instead of carrying its own copy
+# of the relax tuple.
+TILE_RELAX: dict[str, tuple[str, ...]] = {
+    "flash_decode": ("b", "cache_len"),
+    "flash_decode_paged": ("slots", "max_len"),
+    "paged_segment": ("slots", "max_len"),
+    "flash_prefill_ragged": ("slots", "s", "max_len"),
+}
+
+
+def tile_readback(kernel: str, problem: dict[str, Any], *,
+                  cache_path: str | None = None
+                  ) -> tuple[dict[str, int], str]:
+    """Consolidated autotune-cache readback: ``cached_config`` under the
+    kernel's registered :data:`TILE_RELAX` fields, returning
+    ``(config, provenance)``.  Pure read — safe on the trace path."""
+    return cached_config_info(kernel, problem, cache_path=cache_path,
+                              relax=TILE_RELAX.get(kernel, ()))
 
 
 _RESOLVED: dict[tuple, dict[str, int]] = {}   # per-process get_config memo

@@ -361,10 +361,9 @@ def attention(ctx: Ctx, cfg: ArchConfig, p, x, positions,
             # on the trace path).
             from repro.kernels import autotune
             from repro.kernels.flash_decode import flash_decode
-            tile = autotune.cached_config(
+            tile, _ = autotune.tile_readback(
                 "flash_decode",
-                autotune.flash_decode_problem(q.shape, ck.shape, q.dtype),
-                relax=("b", "cache_len"))
+                autotune.flash_decode_problem(q.shape, ck.shape, q.dtype))
             out = flash_decode(q, ck, cv, mask, interpret=ctx.interpret,
                                block_kv=tile["block_kv"]).astype(x.dtype)
         else:
@@ -497,11 +496,10 @@ def _paged_attention_prefill(ctx: Ctx, cfg: ArchConfig, q, k, v, cache):
     if ctx.use_kernels and not seq_sharded:
         from repro.kernels import autotune
         from repro.kernels.flash_prefill_ragged import flash_prefill_ragged
-        tile = autotune.cached_config(
+        tile, _ = autotune.tile_readback(
             "flash_prefill_ragged",
             autotune.flash_prefill_ragged_problem(r, s, h, kvh, hd,
-                                                  n_slots, ps, q.dtype),
-            relax=("slots", "s", "max_len"))
+                                                  n_slots, ps, q.dtype))
         out = flash_prefill_ragged(q, kp, vp, bt, off, lens,
                                    interpret=ctx.interpret,
                                    block_q=tile["block_q"]).astype(q.dtype)

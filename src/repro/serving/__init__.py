@@ -32,13 +32,25 @@ under a quota-aware preemptive resource manager.
   health model (SUSPECT/DEAD with permanent fencing), cross-replica
   failover via verified host swap images, graceful drain/rejoin for
   rolling restarts, and typed ReplicaLost dead letters.
+- plan: the ServingPlan — ONE frozen, JSON-round-trip artifact holding
+  the whole deployment (pool geometry with tuned-tile provenance,
+  scheduler cadence, tenant roster, cluster shape); engines, schedulers,
+  resource managers and clusters all construct from it via
+  ``from_plan``.
+- traffic: seeded TrafficProfile workload generation + the replay
+  scorer the SERVE design-flow task (tasks/serve.py) searches plans
+  with.
 """
 
 from repro.serving.paged_cache import (AllocatorError, PageAllocator,
                                        PagedCacheConfig, PrefixCache,
                                        PrefixMatch, TRASH_PAGE,
                                        init_paged_cache,
-                                       preferred_page_size)
+                                       preferred_page_size,
+                                       preferred_segment_len)
+from repro.serving.plan import HealthPolicy, ServingPlan
+from repro.serving.traffic import TrafficProfile, make_replay_scorer, \
+    replay
 from repro.serving.faults import (ENGINE_SITES, FAULT_SITES,
                                   REPLICA_SITES, FaultPlan, FaultSpec,
                                   InjectedFault)
@@ -49,13 +61,15 @@ from repro.serving.resources import (DEFAULT_TENANT, ResourceManager,
                                      SwapState, TenantConfig)
 from repro.serving.scheduler import ContinuousBatchingScheduler, Request
 from repro.serving.engine import EngineRun, PagedServingEngine
-from repro.serving.cluster import (FrontDoor, HealthPolicy, Replica,
-                                   ReplicaLost, ServingCluster)
+from repro.serving.cluster import (FrontDoor, Replica, ReplicaLost,
+                                   ServingCluster)
 
 __all__ = [
     "AllocatorError", "PageAllocator", "PagedCacheConfig", "PrefixCache",
     "PrefixMatch", "TRASH_PAGE", "init_paged_cache",
-    "preferred_page_size",
+    "preferred_page_size", "preferred_segment_len",
+    "HealthPolicy", "ServingPlan",
+    "TrafficProfile", "make_replay_scorer", "replay",
     "ENGINE_SITES", "FAULT_SITES", "REPLICA_SITES", "FaultPlan",
     "FaultSpec", "InjectedFault",
     "EngineStalledError", "RecoveryManager", "RecoveryPolicy",
@@ -63,6 +77,5 @@ __all__ = [
     "DEFAULT_TENANT", "ResourceManager", "SwapState", "TenantConfig",
     "ContinuousBatchingScheduler", "Request",
     "EngineRun", "PagedServingEngine",
-    "FrontDoor", "HealthPolicy", "Replica", "ReplicaLost",
-    "ServingCluster",
+    "FrontDoor", "Replica", "ReplicaLost", "ServingCluster",
 ]

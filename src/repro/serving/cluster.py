@@ -54,6 +54,9 @@ from typing import Any, Callable
 
 from repro.serving.engine import EngineRun, PagedServingEngine
 from repro.serving.faults import FaultPlan, image_checksum
+# re-exported for back-compat: HealthPolicy moved to serving/plan.py so a
+# ServingPlan can carry the cluster shape without importing this module
+from repro.serving.plan import HealthPolicy, ServingPlan
 from repro.serving.recovery import (EngineStalledError, RecoveryPolicy,
                                     RequestFailed)
 from repro.serving.scheduler import Request
@@ -67,22 +70,6 @@ DRAINING = "DRAINING"
 DOWN = "DOWN"
 DEAD = "DEAD"
 _LIVE = (HEALTHY, SUSPECT)
-
-
-@dataclasses.dataclass(frozen=True)
-class HealthPolicy:
-    """Boundary-heartbeat thresholds.  A replica beats once per round it
-    steps; ``suspect_after`` consecutive misses mark it SUSPECT (still
-    routed as a last resort, still stepped), ``dead_after`` mark it DEAD
-    (fenced + salvaged).  One dropped heartbeat with stepping intact
-    (the ``heartbeat_loss`` site) therefore never kills a replica on its
-    own — the false-positive resilience the thresholds exist for."""
-    suspect_after: int = 2
-    dead_after: int = 4
-
-    def __post_init__(self):
-        if not 1 <= self.suspect_after <= self.dead_after:
-            raise ValueError("need 1 <= suspect_after <= dead_after")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -175,6 +162,21 @@ class ServingCluster:
     once per live replica per round, in index order — so the combined
     schedule replays bit-exactly for a given request set.
     """
+
+    @classmethod
+    def from_plan(cls, model, params, plan: ServingPlan, *,
+                  faults: FaultPlan | None = None,
+                  recovery: RecoveryPolicy | None = None
+                  ) -> "ServingCluster":
+        """Deploy a :class:`~repro.serving.plan.ServingPlan`: build the
+        compiled engine from the plan's cache geometry / prefill mode /
+        tenant roster, then the cluster from its shape (``n_replicas``,
+        ``health``).  The one-call counterpart of the searched-plan JSON
+        the SERVE task emits."""
+        engine = PagedServingEngine.from_plan(model, plan, faults=faults,
+                                              recovery=recovery)
+        return cls(engine, params, n_replicas=plan.n_replicas,
+                   faults=faults, recovery=recovery, health=plan.health)
 
     def __init__(self, engine: PagedServingEngine, params,
                  n_replicas: int = 2, *,

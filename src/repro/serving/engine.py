@@ -62,6 +62,7 @@ from repro.serving.faults import (FaultPlan, InjectedFault, corrupt_image,
 from repro.serving.paged_cache import (AllocatorError, PagedCacheConfig,
                                        TRASH_PAGE, init_paged_cache,
                                        supports_paging)
+from repro.serving.plan import ServingPlan
 from repro.serving.recovery import (EngineStalledError, RecoveryManager,
                                     RecoveryPolicy, diagnostic_snapshot)
 from repro.serving.resources import DEFAULT_TENANT
@@ -73,16 +74,39 @@ class PagedServingEngine:
                  cache_dtype=jnp.bfloat16, prefill_mode: str = "batched",
                  tenants=None, faults: FaultPlan | None = None,
                  recovery: RecoveryPolicy | None = None):
+        # thin compat layer: the kwargs fold into a ServingPlan, which is
+        # the single source of truth every engine now carries
+        # (``self.plan``); serving/plan.py is the declarative front door
+        plan = ServingPlan(arch=str(getattr(model.cfg, "name", "")),
+                           cache=pcfg, prefill_mode=prefill_mode,
+                           cache_dtype=jnp.dtype(cache_dtype).name,
+                           tenants=tuple(tenants or ()))
+        self._init_from_plan(model, plan, faults, recovery)
+
+    @classmethod
+    def from_plan(cls, model, plan: ServingPlan, *,
+                  faults: FaultPlan | None = None,
+                  recovery: RecoveryPolicy | None = None
+                  ) -> "PagedServingEngine":
+        """Construct from a declarative :class:`ServingPlan` — the
+        deployment path for plans the SERVE task searched and emitted as
+        JSON (``ServingPlan.from_dict`` then this).  Bit-exact: the
+        engine's pool geometry, prefill mode, cache dtype, sharing flag,
+        and tenant roster are exactly the plan's."""
+        eng = cls.__new__(cls)
+        eng._init_from_plan(model, plan, faults, recovery)
+        return eng
+
+    def _init_from_plan(self, model, plan: ServingPlan, faults, recovery):
         if not supports_paging(model.cfg):
             raise ValueError(f"{model.cfg.name} does not support the "
                              f"paged decode path")
-        if prefill_mode not in ("batched", "serial"):
-            raise ValueError(f"prefill_mode={prefill_mode!r}")
         self.model = model
-        self.pcfg = pcfg
-        self.cache_dtype = cache_dtype
-        self.prefill_mode = prefill_mode
-        self.tenants = list(tenants) if tenants is not None else None
+        self.plan = plan
+        self.pcfg = plan.cache
+        self.cache_dtype = jnp.dtype(plan.cache_dtype)
+        self.prefill_mode = plan.prefill_mode
+        self.tenants = list(plan.tenants) if plan.tenants else None
         # fault/recovery defaults for run(); run(faults=..., recovery=...)
         # overrides per call so one compiled engine serves both the
         # fault-free baseline and its chaos replays
@@ -90,8 +114,7 @@ class PagedServingEngine:
         self.recovery = recovery
         # prefix sharing needs the ragged suffix prefill: the serial
         # batch-1 path always computes (and would re-store) whole prompts
-        self.sharing = pcfg.enable_prefix_sharing and \
-            prefill_mode == "batched"
+        self.sharing = plan.sharing
         self._prefill = jax.jit(self._prefill_impl)
         self._write_pages = jax.jit(self._write_pages_impl,
                                     donate_argnums=(0,))
@@ -446,9 +469,8 @@ class EngineRun:
         self.faults = faults if faults is not None else engine.faults
         policy = recovery if recovery is not None else engine.recovery
         self.policy = policy if policy is not None else RecoveryPolicy()
-        self.sched = ContinuousBatchingScheduler(
-            pcfg, sharing=engine.sharing, tenants=engine.tenants,
-            faults=self.faults)
+        self.sched = ContinuousBatchingScheduler.from_plan(
+            engine.plan, faults=self.faults)
         self.rec = RecoveryManager(self.policy, self.sched)
         self.cache, _ = init_paged_cache(engine.model.cfg, pcfg,
                                          engine.cache_dtype)

@@ -534,13 +534,17 @@ def preferred_page_size(cfg: ArchConfig, pcfg_slots: int,
     """Tuned page size for this arch's decode shape, from the autotuner's
     persisted cache (pure read — tuning happens in the TUNE task or the
     ``tuned_*`` wrappers, never at pool-construction time).  Falls back
-    to the kernel default on a miss."""
+    to the kernel default on a miss.
+
+    Thin wrapper over the consolidated readback
+    (:func:`repro.kernels.autotune.tile_readback` — the relax keys live
+    in ``autotune.TILE_RELAX``, not here); the provenance-tracked form
+    is ``ServingPlan.resolve`` (serving/plan.py)."""
     from repro.kernels import autotune
     prob = autotune.flash_decode_paged_problem(
         pcfg_slots, cfg.n_heads, cfg.n_kv_heads, cfg.hd, max_len,
         str(cfg.adt))
-    tile = autotune.cached_config("flash_decode_paged", prob,
-                                  relax=("slots", "max_len"))
+    tile, _ = autotune.tile_readback("flash_decode_paged", prob)
     return int(tile["page_size"])
 
 
@@ -559,6 +563,5 @@ def preferred_segment_len(cfg: ArchConfig, pcfg_slots: int,
     prob = autotune.paged_segment_problem(
         pcfg_slots, cfg.n_heads, cfg.n_kv_heads, cfg.hd, max_len, ps,
         str(cfg.adt))
-    tile = autotune.cached_config("paged_segment", prob,
-                                  relax=("slots", "max_len"))
+    tile, _ = autotune.tile_readback("paged_segment", prob)
     return int(tile["segment_len"])

@@ -165,6 +165,14 @@ class ResourceManager:
     completion, preemption, or engine teardown.
     """
 
+    @classmethod
+    def from_plan(cls, plan, *, faults=None) -> "ResourceManager":
+        """Construct from a :class:`~repro.serving.plan.ServingPlan`:
+        pool geometry, tenant roster, and the plan's effective sharing
+        flag (prefix sharing requires the batched prefill path)."""
+        return cls(plan.cache, plan.tenants or None,
+                   sharing=plan.sharing, faults=faults)
+
     def __init__(self, pcfg: PagedCacheConfig,
                  tenants: Iterable[TenantConfig] | None = None,
                  *, sharing: bool | None = None, faults=None):

@@ -97,6 +97,15 @@ class Request:
 
 
 class ContinuousBatchingScheduler:
+    @classmethod
+    def from_plan(cls, plan, *, faults=None
+                  ) -> "ContinuousBatchingScheduler":
+        """Construct from a :class:`~repro.serving.plan.ServingPlan` —
+        cache geometry, effective sharing flag, and tenant roster all
+        come from the one declarative artifact."""
+        return cls(plan.cache, sharing=plan.sharing,
+                   tenants=plan.tenants or None, faults=faults)
+
     def __init__(self, pcfg: PagedCacheConfig, *,
                  sharing: bool | None = None,
                  tenants: Iterable[TenantConfig] | None = None,

@@ -212,9 +212,8 @@ def derive_problems(handle: DNNHandle, *, batch_m: int = 128,
             # flash_decode_paged winner (pure cache read; kernel default
             # on a cold cache), so TUNE tunes the suffix q-tile for the
             # pool layout it itself selects rather than for a constant.
-            pps = int(autotune.cached_config(
-                "flash_decode_paged", pprob,
-                relax=("slots", "max_len"))["page_size"])
+            pps = int(autotune.tile_readback(
+                "flash_decode_paged", pprob)[0]["page_size"])
             sbucket = min(int(seq), 32)
             fprob = autotune.flash_prefill_ragged_problem(
                 db, sbucket, cfg.n_heads, cfg.n_kv_heads, hd, cache_len,

@@ -1,0 +1,315 @@
+"""ServingPlan: round-trip compat contract, provenance-tracked resolve,
+from_plan construction equivalence, staged-search pruning, and the SERVE
+O-task's deterministic search path (stub scorer — no engine replay)."""
+
+import json
+import zlib
+
+import pytest
+
+from repro.core.metamodel import MetaModel
+from repro.core.search import staged_search
+from repro.core.task import TaskError
+from repro.serving import (HealthPolicy, PagedCacheConfig,
+                           PagedServingEngine, ServingPlan,
+                           TenantConfig, TrafficProfile)
+from repro.tasks.model_gen import ModelGen
+from repro.tasks.serve import Serve, candidate_grid
+
+ARCH = "qwen2-7b"               # the paged-eligible smoke shape
+
+
+@pytest.fixture(scope="module")
+def lm_meta():
+    """One ModelGen artifact shared by every SERVE-task test here."""
+    meta = MetaModel()
+    (name,) = ModelGen(model=ARCH, train_en=False, smoke=True).run(
+        meta, [])
+    return meta, name
+
+
+# ------------------------------------------------------------ round-trip
+class TestServingPlanRoundTrip:
+    def mk_plan(self):
+        return ServingPlan(
+            arch=ARCH,
+            cache=PagedCacheConfig(page_size=8, n_pages=25, max_slots=3,
+                                   max_blocks=8, segment_len=4,
+                                   growth_pages=2, retain_pages=3),
+            prefill_mode="batched", cache_dtype="float32",
+            tenants=(TenantConfig("svc", weight=2.0, page_budget=12),
+                     TenantConfig("batch")),
+            n_replicas=3, health=HealthPolicy(suspect_after=1,
+                                              dead_after=2),
+            max_prompt_len=40, max_new_tokens=12,
+            provenance={"page_size": "tuned", "segment_len": "default"})
+
+    def test_json_roundtrip_is_identity(self):
+        plan = self.mk_plan()
+        back = ServingPlan.from_dict(json.loads(json.dumps(
+            plan.to_dict())))
+        assert back == plan
+
+    def test_unknown_keys_dropped_every_level(self):
+        d = self.mk_plan().to_dict()
+        d["future_knob"] = 99
+        d["cache"]["future_cache_knob"] = 7
+        d["tenants"][0]["future_tenant_knob"] = "x"
+        d["health"]["future_health_knob"] = 1
+        assert ServingPlan.from_dict(d) == self.mk_plan()
+
+    def test_missing_keys_defaulted_every_level(self):
+        d = self.mk_plan().to_dict()
+        del d["n_replicas"], d["provenance"]
+        del d["cache"]["growth_pages"]
+        del d["health"]["dead_after"]
+        back = ServingPlan.from_dict(d)
+        assert back.n_replicas == 1
+        assert back.provenance == {}
+        assert back.cache.growth_pages == 0
+        assert back.health.dead_after == HealthPolicy().dead_after
+        # everything not deleted survives
+        assert back.cache.page_size == 8
+        assert back.tenants[0].page_budget == 12
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            ServingPlan(prefill_mode="streaming")
+        with pytest.raises(ValueError):
+            ServingPlan(n_replicas=0)
+        with pytest.raises(ValueError):
+            HealthPolicy(suspect_after=3, dead_after=2)
+
+    def test_sharing_requires_batched_prefill(self):
+        assert ServingPlan().sharing
+        assert not ServingPlan(prefill_mode="serial").sharing
+        off = PagedCacheConfig(enable_prefix_sharing=False)
+        assert not ServingPlan(cache=off).sharing
+
+
+# --------------------------------------------------------------- resolve
+class TestResolve:
+    def test_cold_cache_default_provenance_and_geometry(self, tmp_path):
+        from repro.configs.registry import get_config
+        cfg = get_config(ARCH, smoke=True)
+        cold = str(tmp_path / "empty_cache.json")
+        plan = ServingPlan.resolve(cfg, slots=4, max_prompt_len=32,
+                                   max_new_tokens=16, cache_path=cold)
+        assert plan.provenance["page_size"] == "default"
+        assert plan.provenance["segment_len"] == "default"
+        cap = 32 + 16 + 1
+        blocks = -(-cap // plan.cache.page_size)
+        assert plan.cache.max_blocks == blocks
+        assert plan.cache.n_pages == 4 * blocks + 1
+        assert plan.cache.max_slots == 4
+        assert plan.arch == cfg.name
+
+    def test_explicit_cap_and_overrides(self, tmp_path):
+        from repro.configs.registry import get_config
+        cfg = get_config(ARCH, smoke=True)
+        cold = str(tmp_path / "empty_cache.json")
+        plan = ServingPlan.resolve(cfg, slots=2, max_prompt_len=16,
+                                   max_new_tokens=8, segment_len=4,
+                                   page_size_cap=8, cache_path=cold,
+                                   prefill_bucket=2)
+        assert plan.cache.page_size <= 8
+        assert plan.provenance["page_size"] == "capped"
+        assert plan.provenance["segment_len"] == "explicit"
+        assert plan.provenance["prefill_bucket"] == "explicit"
+        assert plan.cache.prefill_bucket == 2
+        # pool geometry re-derived against the capped page size
+        cap = 16 + 8 + 1
+        assert plan.cache.max_blocks == -(-cap // plan.cache.page_size)
+
+    def test_pool_slots_oversubscription(self, tmp_path):
+        from repro.configs.registry import get_config
+        cfg = get_config(ARCH, smoke=True)
+        cold = str(tmp_path / "empty_cache.json")
+        plan = ServingPlan.resolve(cfg, slots=4, pool_slots=2,
+                                   max_prompt_len=16, max_new_tokens=8,
+                                   cache_path=cold)
+        assert plan.cache.max_slots == 4
+        assert plan.cache.n_pages == 2 * plan.cache.max_blocks + 1
+
+
+# ------------------------------------------------------------- from_plan
+class TestFromPlan:
+    def test_engine_from_plan_matches_kwargs_engine(self, lm_meta):
+        meta, name = lm_meta
+        model = meta.model(name).payload.model
+        pcfg = PagedCacheConfig(page_size=8, n_pages=13, max_slots=2,
+                                max_blocks=6, segment_len=4)
+        tenants = [TenantConfig("svc", weight=2.0, page_budget=6)]
+        kw = PagedServingEngine(model, pcfg, tenants=tenants)
+        plan = kw.plan
+        assert plan.cache == pcfg
+        assert plan.tenants == tuple(tenants)
+        via_plan = PagedServingEngine.from_plan(model, plan)
+        assert via_plan.plan == plan
+        assert via_plan.pcfg == pcfg
+        assert via_plan.cache_dtype == kw.cache_dtype
+        assert via_plan.sharing == kw.sharing
+        assert via_plan.tenants == kw.tenants
+
+    def test_loaded_artifact_deploys_bit_exact(self, lm_meta):
+        meta, name = lm_meta
+        model = meta.model(name).payload.model
+        pcfg = PagedCacheConfig(page_size=8, n_pages=13, max_slots=2,
+                                max_blocks=6, segment_len=4)
+        plan = ServingPlan(arch=ARCH, cache=pcfg, cache_dtype="float32")
+        loaded = ServingPlan.from_dict(json.loads(json.dumps(
+            plan.to_dict())))
+        eng = PagedServingEngine.from_plan(model, loaded)
+        assert eng.plan == plan
+        assert eng.pcfg == pcfg
+        assert eng.cache_dtype.name == "float32"
+
+
+# ---------------------------------------------------------- staged search
+class TestStagedSearch:
+    def test_pruned_candidate_never_runs_stage2(self):
+        stage2_calls = []
+
+        def s1(x):
+            return True, float(-x), {"feat": x}
+
+        def s2(x):
+            stage2_calls.append(x)
+            return True, float(x), {}
+
+        cands = list(range(8))
+        res = staged_search(cands, s1, s2, keep=3)
+        # stage 1 favors small x: exactly {0, 1, 2} reach stage 2
+        assert sorted(stage2_calls) == [0, 1, 2]
+        assert res.best_x == 2          # stage-2 objective favors large
+        stage1 = [s for s in res.steps if s.info["stage"] == 1]
+        stage2 = [s for s in res.steps if s.info["stage"] == 2]
+        assert len(stage1) == len(cands) and len(stage2) == 3
+        for x in (3, 4, 5, 6, 7):       # pruned: only a stage-1 step
+            assert x not in {s.x for s in stage2}
+
+    def test_must_keep_promotes_past_pruning(self):
+        stage2_calls = []
+
+        def s1(x):
+            return True, float(x), {}
+
+        def s2(x):
+            stage2_calls.append(x)
+            return True, float(x), {}
+
+        staged_search(list(range(8)), s1, s2, keep=2, must_keep=(0,))
+        assert sorted(stage2_calls) == [0, 6, 7]
+
+    def test_stage1_infeasible_never_reaches_stage2(self):
+        def s1(x):
+            return x % 2 == 0, float(x), {}
+
+        def s2(x):
+            return True, float(x), {}
+
+        res = staged_search(list(range(6)), s1, s2, keep=6)
+        stage2 = {s.x for s in res.steps if s.info["stage"] == 2}
+        assert stage2 == {0, 2, 4}
+        assert res.best_x == 4
+
+    def test_no_feasible_stage2_returns_none(self):
+        res = staged_search([1, 2], lambda x: (True, 0.0, {}),
+                            lambda x: (False, 0.0, {}), keep=2)
+        assert res.best_x is None
+
+
+# ------------------------------------------------------------ SERVE task
+def stub_scorer(plan, stage):
+    """Deterministic pure-host fitness: a CRC of the effective cache
+    config — stable across processes (unlike hash()) and distinct per
+    candidate."""
+    key = json.dumps(plan.cache.to_dict(), sort_keys=True)
+    score = float(zlib.crc32(f"{key}@{stage}".encode()) % 10_000)
+    return True, score, {"stub": True}
+
+
+class TestServeTask:
+    def test_search_is_deterministic_and_gated(self, lm_meta, tmp_path):
+        meta, name = lm_meta
+        art = str(tmp_path / "plan.json")
+        cold = str(tmp_path / "empty_cache.json")
+        results = []
+        for _ in range(2):
+            m = MetaModel()
+            # reuse the built artifact: determinism is about the search,
+            # not ModelGen
+            m.put(meta.model(name))
+            task = Serve(scorer=stub_scorer, slots=2, cache_path=cold,
+                         artifact_path=art)
+            (out,) = task.run(m, [name])
+            results.append(m.get("serve.result"))
+            assert "+V" in out
+            assert m.model(out).payload.meta["serving_plan"] \
+                == results[-1]["plan"]
+        assert results[0] == results[1]
+        res = results[0]
+        # stage-1 pruning skipped at least half the grid's stage-2 runs
+        assert res["n_stage2"] * 2 <= res["n_candidates"]
+        assert res["n_pruned"] == res["n_candidates"] - res["n_stage2"]
+        # the default plan always reaches stage 2, so the winner is
+        # never worse than it
+        assert res["default_objective"] is not None
+        assert res["objective"] >= res["default_objective"]
+        # the emitted artifact is the winning plan, bit-exact
+        with open(art) as f:
+            assert ServingPlan.from_dict(json.load(f)) \
+                == ServingPlan.from_dict(res["plan"])
+
+    def test_grid_has_default_first_and_unique_candidates(self):
+        plan = ServingPlan()
+        grid = candidate_grid(plan)
+        assert grid[0] == plan
+        keys = [json.dumps(p.cache.to_dict(), sort_keys=True)
+                for p in grid]
+        assert len(set(keys)) == len(keys)
+        # a moved page size re-derives the pool geometry; other one-knob
+        # neighbors keep the base plan's geometry untouched
+        for p in grid[1:]:
+            if p.cache.page_size != plan.cache.page_size:
+                assert p.cache.max_blocks \
+                    == -(-p.cap_tokens // p.cache.page_size)
+            else:
+                assert (p.cache.n_pages, p.cache.max_blocks) \
+                    == (plan.cache.n_pages, plan.cache.max_blocks)
+
+    def test_rejects_unpaged_arch(self):
+        meta = MetaModel()
+        (name,) = ModelGen(model="h2o-danube-3-4b", train_en=False,
+                           smoke=True).run(meta, [])
+        with pytest.raises(TaskError):
+            Serve(scorer=stub_scorer).run(meta, [name])
+
+
+# --------------------------------------------------------------- traffic
+class TestTrafficProfile:
+    def test_requests_deterministic_and_prefix_aligned(self):
+        prof = TrafficProfile(n_requests=5, prompt_len=24,
+                              prefix_share=0.5, arrival_rate=3.0,
+                              tenant_mix=(("a", 1.0), ("b", 2.0)),
+                              seed=9)
+        a = prof.requests(512, page_size=8)
+        b = prof.requests(512, page_size=8)
+        assert [(r.tenant, r.arrival) for r in a] \
+            == [(r.tenant, r.arrival) for r in b]
+        for ra, rb in zip(a, b):
+            assert (ra.prompt == rb.prompt).all()
+        # shared prefix: aligned down to whole pages, shared by all
+        for r in a[1:]:
+            assert (r.prompt[:8] == a[0].prompt[:8]).all()
+
+    def test_roundtrip_and_scaled(self):
+        prof = TrafficProfile(n_requests=9, arrival_rate=2.0,
+                              tenant_mix=(("x", 1.0),), seed=3)
+        back = TrafficProfile.from_dict(json.loads(json.dumps(
+            {**prof.to_dict(), "future": 1})))
+        assert back == prof
+        small = prof.scaled(0.5)
+        assert small.n_requests == 4 or small.n_requests == 5
+        assert small.seed == prof.seed
+        assert small.arrival_rate == prof.arrival_rate

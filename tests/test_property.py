@@ -445,6 +445,56 @@ def test_binary_search_converges_to_boundary(boundary, beta):
     assert boundary - res.best_x <= beta + 1e-9
 
 
+# -------------------------------------------------- SERVE search determinism
+@SETTINGS
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8),
+       st.sampled_from([None, 1.5, 8.0]), st.floats(0.0, 0.9))
+def test_serve_search_deterministic_under_fixed_seed(seed, n, rate,
+                                                     prefix):
+    """The SERVE staged search is a pure function of its seed: the
+    TrafficProfile expands to identical request streams, and the staged
+    search over the candidate grid — with any deterministic scorer —
+    visits identical steps and picks the identical winning plan twice
+    over.  (Wall-clock replay noise is the scorer's problem, not the
+    search machinery's: given a fixed scorer the emitted plan is
+    bit-stable, which is what the deployable-artifact contract needs.)"""
+    import json
+    import zlib
+
+    from repro.core.search import staged_search
+    from repro.serving import ServingPlan, TrafficProfile
+    from repro.tasks.serve import candidate_grid
+
+    prof = TrafficProfile(n_requests=n, arrival_rate=rate,
+                          prefix_share=prefix, seed=seed)
+    a = prof.requests(256, page_size=4)
+    b = prof.requests(256, page_size=4)
+    assert [(r.arrival, r.tenant) for r in a] \
+        == [(r.arrival, r.tenant) for r in b]
+    for ra, rb in zip(a, b):
+        assert (ra.prompt == rb.prompt).all()
+
+    def scorer(plan, stage):
+        key = json.dumps(plan.cache.to_dict(), sort_keys=True)
+        crc = zlib.crc32(f"{seed}:{stage}:{key}".encode())
+        return crc % 7 != 0, float(crc % 10_000), {}
+
+    grid = candidate_grid(ServingPlan())
+    runs = [staged_search(grid, lambda p: scorer(p, 1),
+                          lambda p: scorer(p, 2),
+                          keep=max(1, len(grid) // 2 - 1),
+                          must_keep=(0,))
+            for _ in range(2)]
+    assert runs[0].best_x == runs[1].best_x
+    assert runs[0].best_objective == runs[1].best_objective
+    assert [(s.x, s.objective, s.feasible, s.info.get("stage"))
+            for s in runs[0].steps] \
+        == [(s.x, s.objective, s.feasible, s.info.get("stage"))
+            for s in runs[1].steps]
+    if runs[0].best_x is not None:
+        assert runs[0].best_x.to_dict() == runs[1].best_x.to_dict()
+
+
 # -------------------------------------------------- gradient compression
 @SETTINGS
 @given(st.integers(1, 30))
