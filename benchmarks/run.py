@@ -14,14 +14,17 @@ Prints ``name,us_per_call,derived`` CSV rows:
                     through the paged engine; token-identity gated)
   bench_cluster  -> replicated-serving smoke (replica crash mid-burst
                     through the 3-replica front door; failover gated)
+  bench_restart  -> durable-serving smoke (child process killed by a
+                    seeded crash mid-burst; cold journal recovery gated
+                    bit-identical, torn-tail tolerant, zero leaks)
 
 Usage: ``python benchmarks/run.py [suite ...]`` where suite is any of
-the names below (default: all but chaos and cluster, whose engine rows
-would otherwise be paid for twice).  ``run.py --list`` prints the
-available suites.  CI runs ``run.py kernels``, ``run.py serve``,
-``run.py chaos`` and ``run.py cluster`` as the smoke suites; the kernel
-autotuner persists its tile cache at $REPRO_AUTOTUNE_CACHE so warm runs
-skip the tile search.
+the names below (default: all but chaos, cluster and restart, whose
+engine rows would otherwise be paid for twice).  ``run.py --list``
+prints the available suites.  CI runs ``run.py kernels``, ``run.py
+serve``, ``run.py chaos``, ``run.py cluster`` and ``run.py restart`` as
+the smoke suites; the kernel autotuner persists its tile cache at
+$REPRO_AUTOTUNE_CACHE so warm runs skip the tile search.
 """
 import sys
 
@@ -48,12 +51,16 @@ SUITES = {
     "cluster": ("bench_cluster",
                 "replicated serving: replica crash mid-burst, failover "
                 "and zero-leak gated, affinity reported"),
+    "restart": ("bench_restart",
+                "durable serving: child process crash mid-burst, cold "
+                "journal recovery gated bit-identical-or-dead-letter, "
+                "torn tail tolerated, zero leaked pages/images"),
 }
 # these rows already ride inside (or duplicate the engine build of) the
 # serve suite: running them by default would pay for the build twice.
 # serveflow re-runs TUNE + engine builds as part of the flow under test,
 # so it is likewise its own CI step rather than a default rider.
-NOT_IN_DEFAULT = ("chaos", "cluster", "serveflow")
+NOT_IN_DEFAULT = ("chaos", "cluster", "serveflow", "restart")
 
 
 def _suite_listing() -> str:

@@ -34,9 +34,16 @@ under a quota-aware preemptive resource manager.
   rolling restarts, and typed ReplicaLost dead letters.
 - plan: the ServingPlan — ONE frozen, JSON-round-trip artifact holding
   the whole deployment (pool geometry with tuned-tile provenance,
-  scheduler cadence, tenant roster, cluster shape); engines, schedulers,
-  resource managers and clusters all construct from it via
-  ``from_plan``.
+  scheduler cadence, tenant roster, cluster shape, durability knobs);
+  engines, schedulers, resource managers and clusters all construct
+  from it via ``from_plan``.
+- journal: durable serving — a CRC-framed, segment-rotated write-ahead
+  request journal (JournalWriter) with torn-tail-tolerant idempotent
+  replay (replay_journal) and whole-process crash-restart recovery
+  (RestartRecovery: plan JSON + journal → rebuilt engine/cluster that
+  finishes every request bit-identical or typed-dead-letter), plus the
+  process-level fault sites (wal_torn_write/wal_lost_fsync/
+  process_crash → ProcessCrashed) that make crashes bisectable.
 - traffic: seeded TrafficProfile workload generation + the replay
   scorer the SERVE design-flow task (tasks/serve.py) searches plans
   with.
@@ -48,12 +55,14 @@ from repro.serving.paged_cache import (AllocatorError, PageAllocator,
                                        init_paged_cache,
                                        preferred_page_size,
                                        preferred_segment_len)
-from repro.serving.plan import HealthPolicy, ServingPlan
+from repro.serving.plan import (DurabilityPolicy, HealthPolicy,
+                                ServingPlan)
 from repro.serving.traffic import TrafficProfile, make_replay_scorer, \
     replay
 from repro.serving.faults import (ENGINE_SITES, FAULT_SITES,
-                                  REPLICA_SITES, FaultPlan, FaultSpec,
-                                  InjectedFault)
+                                  PROCESS_SITES, REPLICA_SITES,
+                                  FaultPlan, FaultSpec, InjectedFault,
+                                  ProcessCrashed)
 from repro.serving.recovery import (EngineStalledError, RecoveryManager,
                                     RecoveryPolicy, RequestFailed,
                                     diagnostic_snapshot)
@@ -63,19 +72,26 @@ from repro.serving.scheduler import ContinuousBatchingScheduler, Request
 from repro.serving.engine import EngineRun, PagedServingEngine
 from repro.serving.cluster import (FrontDoor, Replica, ReplicaLost,
                                    ServingCluster)
+from repro.serving.journal import (JOURNAL_VERSION, JournalError,
+                                   JournalReplay, JournalWriter,
+                                   ReplayedRequest, RestartRecovery,
+                                   read_records, replay_journal)
 
 __all__ = [
     "AllocatorError", "PageAllocator", "PagedCacheConfig", "PrefixCache",
     "PrefixMatch", "TRASH_PAGE", "init_paged_cache",
     "preferred_page_size", "preferred_segment_len",
-    "HealthPolicy", "ServingPlan",
+    "DurabilityPolicy", "HealthPolicy", "ServingPlan",
     "TrafficProfile", "make_replay_scorer", "replay",
-    "ENGINE_SITES", "FAULT_SITES", "REPLICA_SITES", "FaultPlan",
-    "FaultSpec", "InjectedFault",
+    "ENGINE_SITES", "FAULT_SITES", "PROCESS_SITES", "REPLICA_SITES",
+    "FaultPlan", "FaultSpec", "InjectedFault", "ProcessCrashed",
     "EngineStalledError", "RecoveryManager", "RecoveryPolicy",
     "RequestFailed", "diagnostic_snapshot",
     "DEFAULT_TENANT", "ResourceManager", "SwapState", "TenantConfig",
     "ContinuousBatchingScheduler", "Request",
     "EngineRun", "PagedServingEngine",
     "FrontDoor", "Replica", "ReplicaLost", "ServingCluster",
+    "JOURNAL_VERSION", "JournalError", "JournalReplay", "JournalWriter",
+    "ReplayedRequest", "RestartRecovery", "read_records",
+    "replay_journal",
 ]

@@ -192,8 +192,20 @@ class ServingCluster:
         self.health = health if health is not None else HealthPolicy()
         t0 = time.perf_counter()
         self.clock = lambda: time.perf_counter() - t0
+        # durable cluster: one root journal (the plan JSON + cluster-
+        # level dead letters) and one subdirectory journal per replica,
+        # all under plan.durability.journal_dir; RestartRecovery merges
+        # the per-replica streams per request on replay
+        self.journal = None
+        pol = engine.plan.durability
+        if pol.enabled:
+            from repro.serving.journal import JournalWriter
+            plan = dataclasses.replace(engine.plan,
+                                       n_replicas=n_replicas)
+            self.journal = JournalWriter.from_policy(pol, plan=plan,
+                                                     faults=self.faults)
         self.replicas = [Replica(name=f"r{i}",
-                                 run=self._fresh_run())
+                                 run=self._fresh_run(f"r{i}"))
                          for i in range(n_replicas)]
         self.front_door = FrontDoor(self.replicas)
         self.dead: list[Request] = []   # cluster-level dead letters
@@ -202,9 +214,18 @@ class ServingCluster:
         self.n_restarted = 0            # failovers via full restart
         self.n_drained = 0              # graceful drain migrations
 
-    def _fresh_run(self) -> EngineRun:
+    def _fresh_run(self, name: str = "") -> EngineRun:
+        journal = None
+        pol = self.engine.plan.durability
+        if pol.enabled and name:
+            from repro.serving.journal import JournalWriter
+            # a rejoin reopens the replica's existing subdirectory and
+            # appends (the writer repairs any torn tail first)
+            journal = JournalWriter.from_policy(pol, subdir=name,
+                                                faults=self.faults)
         return EngineRun(self.engine, self.params, faults=self.faults,
-                         recovery=self.recovery, clock=self.clock)
+                         recovery=self.recovery, clock=self.clock,
+                         journal=journal)
 
     def _replica(self, name: str) -> Replica:
         for r in self.replicas:
@@ -313,6 +334,8 @@ class ServingCluster:
                                   replica=replica)
         req.t_done = self.clock()
         self.dead.append(req)
+        if self.journal is not None:
+            self.journal.dead_letter(req.failure.record())
 
     def _salvage(self, rep: Replica) -> None:
         """Fence a DEAD replica and fail its requests over.  Host-side
@@ -391,6 +414,16 @@ class ServingCluster:
             self.n_drained += 1
         return len(moved)
 
+    def close_journals(self) -> None:
+        """Flush + close every journal writer (root and per-replica).
+        A no-op without durability, and after an injected crash (the
+        crashed writer is already closed without flushing)."""
+        if self.journal is not None:
+            self.journal.close()
+        for rep in self.replicas:
+            if rep.run.journal is not None:
+                rep.run.journal.close()
+
     def rejoin(self, name: str) -> None:
         """Bring a DOWN (or replaced-DEAD) replica back with a fresh
         run: empty pool, cold prefix trie (it re-warms through
@@ -398,7 +431,9 @@ class ServingCluster:
         rep = self._replica(name)
         if rep.live:
             raise ValueError(f"replica {name!r} is already live")
-        rep.run = self._fresh_run()
+        if rep.run.journal is not None:
+            rep.run.journal.close()
+        rep.run = self._fresh_run(rep.name)
         rep.state = HEALTHY
         rep.missed = 0
         rep.crashed = rep.hung = rep.fenced = False

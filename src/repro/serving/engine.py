@@ -57,8 +57,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.faults import (FaultPlan, InjectedFault, corrupt_image,
-                                  image_checksum)
+from repro.serving.faults import (FaultPlan, InjectedFault, ProcessCrashed,
+                                  corrupt_image, image_checksum)
 from repro.serving.paged_cache import (AllocatorError, PagedCacheConfig,
                                        TRASH_PAGE, init_paged_cache,
                                        supports_paging)
@@ -394,7 +394,8 @@ class PagedServingEngine:
 
     def run(self, requests: list[Request], params, *,
             faults: FaultPlan | None = None,
-            recovery: RecoveryPolicy | None = None) -> dict:
+            recovery: RecoveryPolicy | None = None,
+            journal=None) -> dict:
         """Serve ``requests`` (honoring their ``arrival`` offsets) to
         completion.  Mutates each request in place (tokens, t_admitted,
         t_done, all relative to engine start) and returns run counters.
@@ -410,35 +411,55 @@ class PagedServingEngine:
         retries.  The only exception that escapes the loop is
         :class:`EngineStalledError` from the no-progress watchdog.
 
+        With ``plan.durability.enabled`` (or an explicit ``journal``
+        writer), every lifecycle transition is journaled inside the
+        boundary protocol — and the ``process_crash`` fault site arms:
+        :class:`~repro.serving.faults.ProcessCrashed` escapes this loop
+        (a dead process cannot heal itself) and
+        :class:`~repro.serving.journal.RestartRecovery` finishes the
+        work from disk.
+
         This is a thin wrapper over :class:`EngineRun`: feed arrivals,
         step boundaries, sleep through idle gaps.  A cluster
         (serving/cluster.py) instead drives N EngineRuns round-robin off
         the same compiled engine.
         """
-        er = EngineRun(self, params, faults=faults, recovery=recovery)
+        own_journal = False
+        if journal is None and self.plan.durability.enabled:
+            from repro.serving.journal import JournalWriter
+            journal = JournalWriter.from_policy(
+                self.plan.durability, plan=self.plan,
+                faults=faults if faults is not None else self.faults)
+            own_journal = True
+        er = EngineRun(self, params, faults=faults, recovery=recovery,
+                       journal=journal)
         queue = sorted(requests, key=lambda q: q.arrival)
         nxt_arrival = 0
-        while nxt_arrival < len(queue) or er.has_work:
-            now = er.clock()
-            while (nxt_arrival < len(queue)
-                   and queue[nxt_arrival].arrival <= now):
-                er.submit(queue[nxt_arrival])
-                nxt_arrival += 1
-            if er.step() == "idle":
-                if nxt_arrival < len(queue):
-                    # the pre-sorted queue's next arrival is the only
-                    # possible event while idle: sleep the whole gap
-                    wait = queue[nxt_arrival].arrival - er.clock()
-                    if wait > 0:
-                        time.sleep(wait)
-                elif er.has_work:
-                    # queued/preempted/quarantined requests, nothing
-                    # running, no arrivals left: only an admission (or a
-                    # backoff expiry) can make progress and this boundary
-                    # produced none — count it toward the watchdog
-                    # instead of busy-spinning
-                    er.note_stall()
-        return er.result()
+        try:
+            while nxt_arrival < len(queue) or er.has_work:
+                now = er.clock()
+                while (nxt_arrival < len(queue)
+                       and queue[nxt_arrival].arrival <= now):
+                    er.submit(queue[nxt_arrival])
+                    nxt_arrival += 1
+                if er.step() == "idle":
+                    if nxt_arrival < len(queue):
+                        # the pre-sorted queue's next arrival is the only
+                        # possible event while idle: sleep the whole gap
+                        wait = queue[nxt_arrival].arrival - er.clock()
+                        if wait > 0:
+                            time.sleep(wait)
+                    elif er.has_work:
+                        # queued/preempted/quarantined requests, nothing
+                        # running, no arrivals left: only an admission (or
+                        # a backoff expiry) can make progress and this
+                        # boundary produced none — count it toward the
+                        # watchdog instead of busy-spinning
+                        er.note_stall()
+            return er.result()
+        finally:
+            if own_journal:
+                journal.close()     # no-op after a crash() in step()
 
 
 class EngineRun:
@@ -461,7 +482,7 @@ class EngineRun:
     def __init__(self, engine: PagedServingEngine, params, *,
                  faults: FaultPlan | None = None,
                  recovery: RecoveryPolicy | None = None,
-                 clock=None):
+                 clock=None, journal=None):
         self.engine = engine
         self.params = params
         pcfg = engine.pcfg
@@ -472,6 +493,12 @@ class EngineRun:
         self.sched = ContinuousBatchingScheduler.from_plan(
             engine.plan, faults=self.faults)
         self.rec = RecoveryManager(self.policy, self.sched)
+        # the write-ahead journal (serving/journal.py), when durability
+        # is on: lifecycle records are emitted inside the boundary
+        # protocol below, and the recovery manager shares the writer so
+        # dead letters round-trip through it
+        self.journal = journal
+        self.rec.journal = journal
         self.cache, _ = init_paged_cache(engine.model.cfg, pcfg,
                                          engine.cache_dtype)
         r, m = pcfg.max_slots, pcfg.max_blocks
@@ -496,6 +523,10 @@ class EngineRun:
     # ----------------------------------------------------------- frontend
     def submit(self, req: Request) -> None:
         self.sched.submit(req)
+        # journal AFTER validation: a rejected submit was never accepted,
+        # so there is nothing to make durable
+        if self.journal is not None:
+            self.journal.submit(req)
 
     @property
     def has_work(self) -> bool:
@@ -518,6 +549,8 @@ class EngineRun:
                 req.t_done = now
                 self.sched.complete(slot)
                 self._park_slot(slot)
+                if self.journal is not None:
+                    self.journal.complete(req)
 
     def _start_request(self, req: Request, first_tok: int,
                        now: float) -> None:
@@ -565,6 +598,8 @@ class EngineRun:
             swap = self.sched.rm.preempt(req, requeue=False)
             self.engine._swap_out(self.cache, swap, self.faults)
             self._vacate(req)
+            if self.journal is not None:
+                self.journal.spill_image(req)
         else:
             # no committed state to preserve: full restart
             self.sched.rm.release_request(req)
@@ -607,6 +642,16 @@ class EngineRun:
         engine, sched, rec = self.engine, self.sched, self.rec
         faults, clock = self.faults, self.clock
         bt, seq_lens = self.bt, self.seq_lens
+        # the process_crash site: probed only when a journal is armed —
+        # without one a process death is unrecoverable and injecting it
+        # would only prove the obvious.  The journal drops its unflushed
+        # buffer (kill -9: only fsync'd records survive) and the
+        # exception escapes run() entirely; RestartRecovery is the only
+        # way back.
+        if self.journal is not None and faults is not None \
+                and faults.should_fire("process_crash"):
+            self.journal.crash()
+            raise ProcessCrashed(self.boundary + 1)
         self.boundary += 1
         boundary = self.boundary
         # recovery preflight: quarantined requests whose backoff
@@ -625,6 +670,11 @@ class EngineRun:
         for req in preempted:
             engine._swap_out(self.cache, req.swap, faults)
             self._park_slot(req.swap.slot)
+            if self.journal is not None:
+                # spill the host image beside the journal: a crash from
+                # here on restores this request through the verified-
+                # swap-image lane instead of restarting it
+                self.journal.spill_image(req)
         # grown block tables: new pages append to the owned prefix
         for slot, req in sched.running.items():
             bt[slot, :len(req.pages)] = req.pages
@@ -700,6 +750,13 @@ class EngineRun:
                     self._start_request(req, first, clock())
                     self.n_prefill_dispatches += 1
                     ok_admitted.append(req)
+            if self.journal is not None:
+                # before finish_boundary: it clears req.swap, which is
+                # what distinguishes a restore from a fresh admission
+                rest_ids = set(map(id, restored))
+                for req in ok_admitted:
+                    self.journal.admit(req,
+                                       restore=id(req) in rest_ids)
             sched.finish_boundary(ok_admitted)
             for kind, req in failed_admissions:
                 self._unwind_admission(kind, req)
@@ -732,6 +789,11 @@ class EngineRun:
         # instant is exactly what the device pages back — the
         # watermark every later rollback truncates to
         rec.checkpoint(sched.running.values())
+        if self.journal is not None:
+            # the durable twin of rec.checkpoint: committed-token
+            # watermarks, batched one record per boundary and fsync'd on
+            # the plan's cadence
+            self.journal.checkpoint(boundary, sched.running.values())
         # activity is a pure function of scheduler state: stalled
         # slots sit a segment out (their frozen write slot stays
         # inside pages they own), everyone else runs to max_new.
@@ -821,6 +883,8 @@ class EngineRun:
             self.engine._swap_out(self.cache, swap, self.faults)
             req.n_preempted += 1
             self._vacate(req)
+            if self.journal is not None:
+                self.journal.spill_image(req)
             out.append(req)
         out.extend(self.sched.rm.drain_queued())
         out.extend(self.rec.drain_quarantined())
@@ -841,6 +905,10 @@ class EngineRun:
                **self.sched.stats()}
         if self.faults is not None:
             out["faults"] = self.faults.summary()
+        if self.journal is not None:
+            out["journal"] = {"n_appended": self.journal.n_appended,
+                              "n_flushes": self.journal.n_flushes,
+                              "n_spilled": self.journal.n_spilled}
         return out
 
 

@@ -62,7 +62,21 @@ ENGINE_SITES = ("alloc", "swap_corrupt", "swap_loss", "decode_poison",
 #                    (a healthy replica marked SUSPECT must recover, and
 #                    one fenced DEAD must stay fenced)
 REPLICA_SITES = ("replica_crash", "replica_hang", "heartbeat_loss")
-SITES = ENGINE_SITES + REPLICA_SITES
+# Process-level sites, probed only when a write-ahead journal is armed
+# (serving/journal.py) — without one a process death is unrecoverable and
+# injecting it would only prove the obvious:
+#   wal_torn_write   one journal record reaches disk truncated and the
+#                    writer goes dark — the classic crash-mid-write tail
+#                    that replay must drop, not die on
+#   wal_lost_fsync   one fsync batch silently never reaches disk (page
+#                    cache lost at crash); later batches may still land,
+#                    so replay sees a record *hole*, not a prefix
+#   process_crash    the whole process dies between boundaries: raised
+#                    as ProcessCrashed out of EngineRun.step after the
+#                    journal drops its unflushed buffer (kill -9
+#                    semantics: only fsync'd records survive)
+PROCESS_SITES = ("wal_torn_write", "wal_lost_fsync", "process_crash")
+SITES = ENGINE_SITES + REPLICA_SITES + PROCESS_SITES
 FAULT_SITES = SITES                     # package-level export alias
 
 
@@ -76,6 +90,19 @@ class InjectedFault(RuntimeError):
                          f"(opportunity {opportunity})")
         self.site = site
         self.opportunity = opportunity
+
+
+class ProcessCrashed(RuntimeError):
+    """The ``process_crash`` site fired: the serving process is "dead".
+    Deliberately NOT an :class:`InjectedFault` subclass — the in-process
+    recovery layer must never catch it (a dead process cannot heal
+    itself); it propagates out of ``run()`` and the journal's
+    :class:`~repro.serving.journal.RestartRecovery` is the only way
+    back."""
+
+    def __init__(self, boundary: int):
+        super().__init__(f"injected process crash at boundary {boundary}")
+        self.boundary = boundary
 
 
 @dataclasses.dataclass(frozen=True)

@@ -19,6 +19,9 @@ dataclass:
   prefix-sharing flags);
 - the tenant roster and the cluster shape (``n_replicas``,
   :class:`HealthPolicy`);
+- the durability story (:class:`DurabilityPolicy`: whether runs built
+  from the plan keep a write-ahead request journal, where it lives,
+  its fsync cadence and segment rotation size — serving/journal.py);
 - the workload sizing the pool was resolved against
   (``max_prompt_len``/``max_new_tokens``), so a loaded plan can
   re-validate or re-resolve.
@@ -68,6 +71,37 @@ class HealthPolicy:
             raise ValueError("need 1 <= suspect_after <= dead_after")
 
 
+@dataclasses.dataclass(frozen=True)
+class DurabilityPolicy:
+    """Write-ahead-journal knobs (serving/journal.py).
+
+    ``enabled`` turns on journaling for every run built from the plan;
+    ``journal_dir`` is where segments, spilled swap images, and the
+    plan's own JSON land (the *whole* restart story lives in that one
+    directory); ``fsync_boundaries`` is the fsync batching cadence —
+    progress records buffer and hit disk every N segment boundaries
+    (terminal records always fsync immediately: a SUBMIT/COMPLETE/
+    DEAD-LETTER is an acknowledgement); ``segment_bytes`` rotates the
+    journal to a fresh segment file once the current one exceeds it.
+
+    Defined here (not serving/journal.py) for the same reason as
+    :class:`HealthPolicy`: the plan must carry the knob group without
+    importing the machinery."""
+    enabled: bool = False
+    journal_dir: str = ""
+    fsync_boundaries: int = 1
+    segment_bytes: int = 1 << 20
+
+    def __post_init__(self):
+        if self.enabled and not self.journal_dir:
+            raise ValueError("durability enabled without a journal_dir")
+        if self.fsync_boundaries < 1:
+            raise ValueError("fsync_boundaries must be >= 1")
+        if self.segment_bytes < 256:
+            raise ValueError("segment_bytes must be >= 256 (a segment "
+                             "must fit at least one framed record)")
+
+
 def _filtered(cls, d: dict[str, Any]):
     """Drop-unknown/default-missing constructor for a dataclass — the
     PagedCacheConfig.from_dict forward-compat contract, shared by every
@@ -87,6 +121,8 @@ class ServingPlan:
     tenants: tuple[TenantConfig, ...] = ()
     n_replicas: int = 1
     health: HealthPolicy = dataclasses.field(default_factory=HealthPolicy)
+    durability: DurabilityPolicy = dataclasses.field(
+        default_factory=DurabilityPolicy)
     # workload sizing the pool geometry was resolved against
     max_prompt_len: int = 32
     max_new_tokens: int = 16
@@ -131,6 +167,7 @@ class ServingPlan:
                 cache_dtype: str = "bfloat16",
                 tenants=(), n_replicas: int = 1,
                 health: HealthPolicy | None = None,
+                durability: DurabilityPolicy | None = None,
                 cache_path: str | None = None,
                 **cache_overrides: Any) -> "ServingPlan":
         """The one provenance-tracked readback-and-geometry step.
@@ -185,10 +222,13 @@ class ServingPlan:
                                  **cache_overrides)
         for k in cache_overrides:
             prov[k] = "explicit"
+        prov["durability"] = "default" if durability is None else "explicit"
         return cls(arch=str(getattr(cfg, "name", "")), cache=cache,
                    prefill_mode=prefill_mode, cache_dtype=cache_dtype,
                    tenants=tuple(tenants or ()), n_replicas=n_replicas,
                    health=health if health is not None else HealthPolicy(),
+                   durability=(durability if durability is not None
+                               else DurabilityPolicy()),
                    max_prompt_len=max_prompt_len,
                    max_new_tokens=max_new_tokens, provenance=prov)
 
@@ -204,6 +244,7 @@ class ServingPlan:
             "tenants": [dataclasses.asdict(t) for t in self.tenants],
             "n_replicas": self.n_replicas,
             "health": dataclasses.asdict(self.health),
+            "durability": dataclasses.asdict(self.durability),
             "max_prompt_len": self.max_prompt_len,
             "max_new_tokens": self.max_new_tokens,
             "provenance": dict(self.provenance),
@@ -225,6 +266,9 @@ class ServingPlan:
                 for t in kw["tenants"])
         if isinstance(kw.get("health"), dict):
             kw["health"] = _filtered(HealthPolicy, kw["health"])
+        if isinstance(kw.get("durability"), dict):
+            kw["durability"] = _filtered(DurabilityPolicy,
+                                         kw["durability"])
         if "provenance" in kw:
             kw["provenance"] = dict(kw["provenance"])
         return cls(**kw)

@@ -143,6 +143,10 @@ class RecoveryManager:
         self.policy = policy
         self.sched = sched
         self.rm = sched.rm
+        # write-ahead journal (serving/journal.py), set by EngineRun when
+        # durability is on: dead letters round-trip through it so a
+        # restart re-emits the same typed terminal records
+        self.journal = None
         # (request, boundary at which its backoff expires)
         self._quarantine: list[tuple["Request", int]] = []
         self.dead: list["Request"] = []
@@ -240,6 +244,8 @@ class RecoveryManager:
         self.rm.state(req.tenant).dead_lettered += 1
         self.rm.dead_letters += 1
         self.dead.append(req)
+        if self.journal is not None:
+            self.journal.dead_letter(req.failure.record())
 
     # ------------------------------------------------------ swap integrity
     def verify_swaps(self, boundary: int, now: float) -> int:

@@ -138,16 +138,37 @@ def replay(model, params, plan, profile: TrafficProfile, *,
     (admission latency, preemptions, peak pages, ...) stage 1 prunes on.
     Replication is a deployment knob, not a fitness term — scoring runs
     a single engine regardless of ``plan.n_replicas``.
+
+    Isolation: a candidate plan that stalls its engine (pathological
+    geometry under the profile) scores infeasible instead of raising —
+    and win or lose, every request's engine residue (host swap images,
+    page lists into the candidate's pool) is scrubbed in a ``finally``,
+    so a faulted stage-1 replay in ``staged_search`` can never leak
+    pool state into the next candidate's measurement.
     """
     from repro.serving.engine import PagedServingEngine
+    from repro.serving.recovery import EngineStalledError
 
     engine = PagedServingEngine.from_plan(model, plan)
     vocab = int(model.cfg.vocab_size)
     ps = plan.cache.page_size
-    for _ in range(max(0, warm)):
-        engine.run(profile.requests(vocab, page_size=ps), params)
+    warm_reqs: list = []
     reqs = profile.requests(vocab, page_size=ps)
-    stats = engine.run(reqs, params)
+    try:
+        for _ in range(max(0, warm)):
+            warm_reqs = profile.requests(vocab, page_size=ps)
+            engine.run(warm_reqs, params)
+        stats = engine.run(reqs, params)
+    except EngineStalledError as e:
+        return False, 0.0, {"profile": profile.name, "stalled": True,
+                            "reason": str(e)}
+    finally:
+        for r in reqs + warm_reqs:
+            r.swap = None
+            r.pages = None
+            r.slot = None
+            r.restore_blocks = (0, 0)
+        del engine
     adm = [r.t_admitted - r.arrival for r in reqs
            if r.t_admitted is not None]
     tokens = sum(len(r.tokens) for r in reqs if r.tokens)
