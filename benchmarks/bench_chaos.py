@@ -11,6 +11,12 @@ fault-free run, nothing dead-letters under the default retry policy,
 the audit flags nothing, and the healing wall overhead stays within
 ``CHAOS_OVERHEAD_MAX``.  Results land in
 ``benchmarks/results/chaos_bench.json``.
+
+The chaos row runs with telemetry enabled: it writes a Prometheus text
+export and a JSONL request-lifecycle trace of the best faulted run to
+``benchmarks/results/chaos_telemetry/`` (CI uploads both), and an extra
+gate requires every injected fault fire to be attributable to a
+specific request span (``telemetry.faults_attributed``).
 """
 
 from __future__ import annotations
@@ -68,6 +74,17 @@ def main():
             "chaos smoke failed: self-healing wall overhead "
             f"{row['chaos_overhead']:.2f}x exceeded "
             f"{CHAOS_OVERHEAD_MAX}x the fault-free run")
+    tel = row["telemetry"]
+    import os
+    if not all(os.path.exists(p) for p in tel["exports"].values()):
+        raise SystemExit("chaos smoke failed: telemetry exports missing "
+                         f"from {tel['exports']}")
+    if not tel["faults_attributed"]:
+        raise SystemExit(
+            "chaos smoke failed: an injected fault fire (or a "
+            "quarantine/dead-letter it caused) could not be attributed "
+            "to a specific request span in the JSONL trace (see "
+            f"{tel['exports']['trace']})")
     return results
 
 

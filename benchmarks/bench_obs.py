@@ -1,0 +1,130 @@
+"""Observability overhead suite: telemetry must be (near) free.
+
+Replays the serving suite's burst-row geometry (``bench_serve``:
+LOAD_BURST concurrent requests on the LOAD_SLOTS-slot paged engine)
+twice per iteration on the same warmed engine — once with telemetry
+disabled (the ServingPlan default: counters only, histograms/gauges
+bound to NULL_METRIC, no tracer) and once fully enabled (histograms,
+gauges, request-lifecycle tracing) — interleaved so machine drift hits
+both sides equally.  The gate compares best-of-``ITERS`` walls:
+enabled must stay within ``OBS_OVERHEAD_MAX`` of disabled.
+
+A second row times the disabled-mode probe itself (the
+``NULL_METRIC.observe`` no-op every gated instrument degrades to) in
+nanoseconds per call — the "disabled mode costs one attribute lookup"
+claim, measured.
+
+The enabled run's Prometheus text export and JSONL trace land in
+``benchmarks/results/obs_telemetry/`` (CI uploads them as artifacts);
+rows land in ``benchmarks/results/obs_bench.json``.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+try:
+    from benchmarks.bench_serve import (LOAD_ARCH, LOAD_BURST, LOAD_GEN,
+                                        LOAD_PROMPT, LOAD_SLOTS,
+                                        _fresh_obs, _load_requests)
+    from benchmarks.common import RESULTS_DIR, emit, save_json
+except ImportError:
+    from bench_serve import (LOAD_ARCH, LOAD_BURST, LOAD_GEN,
+                             LOAD_PROMPT, LOAD_SLOTS, _fresh_obs,
+                             _load_requests)
+    from common import RESULTS_DIR, emit, save_json
+
+ITERS = 5
+OBS_OVERHEAD_MAX = 1.03          # enabled wall <= 3% over disabled
+PROBE_CALLS = 1_000_000
+
+
+def _probe_ns() -> float:
+    """Per-call cost of the disabled-mode no-op probe."""
+    from repro.serving.observe import NULL_METRIC
+
+    observe = NULL_METRIC.observe
+    for _ in range(1000):        # warm
+        observe(1.0, ("r0",))
+    t0 = time.perf_counter()
+    for _ in range(PROBE_CALLS):
+        observe(1.0, ("r0",))
+    return (time.perf_counter() - t0) / PROBE_CALLS * 1e9
+
+
+def main():
+    from repro.configs.registry import get_config
+    from repro.models.api import build_model
+    from repro.serving import PagedCacheConfig, PagedServingEngine
+    from repro.serving.engine import warmup
+    from repro.serving.paged_cache import (preferred_page_size,
+                                           preferred_segment_len)
+
+    cfg = get_config(LOAD_ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cap_tokens = LOAD_PROMPT + LOAD_GEN + 1
+    page_size = preferred_page_size(cfg, LOAD_SLOTS, cap_tokens)
+    blocks = -(-cap_tokens // page_size)
+    pcfg = PagedCacheConfig(page_size=page_size,
+                            n_pages=LOAD_SLOTS * blocks + 1,
+                            max_slots=LOAD_SLOTS, max_blocks=blocks,
+                            segment_len=preferred_segment_len(
+                                cfg, LOAD_SLOTS, cap_tokens))
+    engine = PagedServingEngine(model, pcfg)
+    warmup(engine, params, LOAD_PROMPT, LOAD_GEN)
+    engine.run(_load_requests(cfg, LOAD_BURST, seed=97), params)
+
+    best_off = best_on = None
+    obs_best = stats_best = None
+    for _ in range(ITERS):
+        r_off = _load_requests(cfg, LOAD_BURST, 1)
+        s_off = engine.run(r_off, params)        # plan default: disabled
+        if best_off is None or s_off["wall_s"] < best_off:
+            best_off = s_off["wall_s"]
+        r_on = _load_requests(cfg, LOAD_BURST, 1)
+        obs = _fresh_obs()
+        s_on = engine.run(r_on, params, obs=obs)
+        if best_on is None or s_on["wall_s"] < best_on:
+            best_on, obs_best, stats_best = s_on["wall_s"], obs, s_on
+    overhead = best_on / max(best_off, 1e-9)
+    exports = obs_best.export(os.path.join(RESULTS_DIR, "obs_telemetry"))
+    probe_ns = _probe_ns()
+
+    row = {
+        "load": f"burst{LOAD_BURST}",
+        "arch": cfg.name, "prompt_len": LOAD_PROMPT, "gen": LOAD_GEN,
+        "slots": LOAD_SLOTS, "iters": ITERS,
+        "wall_disabled_s": best_off,
+        "wall_enabled_s": best_on,
+        "obs_overhead": overhead,
+        "obs_overhead_max": OBS_OVERHEAD_MAX,
+        "disabled_probe_ns": probe_ns,
+        "n_trace_events": len(obs_best.tracer.events),
+        "metrics": stats_best["metrics"],
+        "exports": exports,
+    }
+    results = {"backend": jax.default_backend(), "t": time.time(),
+               "obs": row}
+    emit("serve_obs_overhead", best_on * 1e6,
+         f"vs_disabled={overhead:.4f}x;"
+         f"trace_events={row['n_trace_events']};"
+         f"probe_ns={probe_ns:.1f}")
+    save_json("obs_bench.json", results)
+    if overhead > OBS_OVERHEAD_MAX:
+        raise SystemExit(
+            "observability overhead gate failed: telemetry-enabled "
+            f"burst wall was {overhead:.4f}x the disabled wall "
+            f"(max {OBS_OVERHEAD_MAX}x) — see "
+            "benchmarks/results/obs_bench.json")
+    for p in exports.values():
+        if not os.path.exists(p):
+            raise SystemExit(f"observability export missing: {p}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_restart  -> durable-serving smoke (child process killed by a
                     seeded crash mid-burst; cold journal recovery gated
                     bit-identical, torn-tail tolerant, zero leaks)
+  bench_obs      -> observability overhead smoke (telemetry-enabled vs
+                    disabled burst wall gated within 3%; Prometheus +
+                    JSONL exports written as CI artifacts)
 
 Usage: ``python benchmarks/run.py [suite ...]`` where suite is any of
 the names below (default: all but chaos, cluster and restart, whose
@@ -55,12 +58,15 @@ SUITES = {
                 "durable serving: child process crash mid-burst, cold "
                 "journal recovery gated bit-identical-or-dead-letter, "
                 "torn tail tolerated, zero leaked pages/images"),
+    "obs": ("bench_obs",
+            "observability overhead: telemetry-enabled vs disabled "
+            "burst wall gated within 3%, exports written as artifacts"),
 }
 # these rows already ride inside (or duplicate the engine build of) the
 # serve suite: running them by default would pay for the build twice.
 # serveflow re-runs TUNE + engine builds as part of the flow under test,
 # so it is likewise its own CI step rather than a default rider.
-NOT_IN_DEFAULT = ("chaos", "cluster", "serveflow", "restart")
+NOT_IN_DEFAULT = ("chaos", "cluster", "serveflow", "restart", "obs")
 
 
 def _suite_listing() -> str:

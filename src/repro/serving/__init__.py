@@ -47,6 +47,11 @@ under a quota-aware preemptive resource manager.
 - traffic: seeded TrafficProfile workload generation + the replay
   scorer the SERVE design-flow task (tasks/serve.py) searches plans
   with.
+- observe: the zero-dependency telemetry layer — a typed
+  MetricsRegistry (counters always live behind the stats() views;
+  histograms/gauges and the request-lifecycle Tracer gated by
+  ObservabilityPolicy), Prometheus-text and JSONL exporters, and the
+  render_summary roll-up bench rows embed.
 """
 
 from repro.serving.paged_cache import (AllocatorError, PageAllocator,
@@ -56,7 +61,10 @@ from repro.serving.paged_cache import (AllocatorError, PageAllocator,
                                        preferred_page_size,
                                        preferred_segment_len)
 from repro.serving.plan import (DurabilityPolicy, HealthPolicy,
-                                ServingPlan)
+                                ObservabilityPolicy, ServingPlan)
+from repro.serving.observe import (MetricsRegistry, NULL_METRIC,
+                                   Observability, Tracer,
+                                   exponential_buckets, render_summary)
 from repro.serving.traffic import TrafficProfile, make_replay_scorer, \
     replay
 from repro.serving.faults import (ENGINE_SITES, FAULT_SITES,
@@ -81,7 +89,10 @@ __all__ = [
     "AllocatorError", "PageAllocator", "PagedCacheConfig", "PrefixCache",
     "PrefixMatch", "TRASH_PAGE", "init_paged_cache",
     "preferred_page_size", "preferred_segment_len",
-    "DurabilityPolicy", "HealthPolicy", "ServingPlan",
+    "DurabilityPolicy", "HealthPolicy", "ObservabilityPolicy",
+    "ServingPlan",
+    "MetricsRegistry", "NULL_METRIC", "Observability", "Tracer",
+    "exponential_buckets", "render_summary",
     "TrafficProfile", "make_replay_scorer", "replay",
     "ENGINE_SITES", "FAULT_SITES", "PROCESS_SITES", "REPLICA_SITES",
     "FaultPlan", "FaultSpec", "InjectedFault", "ProcessCrashed",

@@ -54,6 +54,7 @@ from typing import Any, Callable
 
 from repro.serving.engine import EngineRun, PagedServingEngine
 from repro.serving.faults import FaultPlan, image_checksum
+from repro.serving.observe import Observability
 # re-exported for back-compat: HealthPolicy moved to serving/plan.py so a
 # ServingPlan can carry the cluster shape without importing this module
 from repro.serving.plan import HealthPolicy, ServingPlan
@@ -113,10 +114,25 @@ class FrontDoor:
     never route.  Returns None when nothing can take the request.
     """
 
-    def __init__(self, replicas: list[Replica]):
+    def __init__(self, replicas: list[Replica], obs=None):
         self.replicas = replicas
-        self.routed = 0
-        self.affinity_hits = 0          # routed to a replica with a match
+        obs = obs if obs is not None else Observability.disabled()
+        # labeled by the TARGET replica; the historical totals read back
+        # through the registry as thin views
+        self._c_routed = obs.counter(
+            "serving_frontdoor_routed_total",
+            "requests routed, by target replica", ("replica",))
+        self._c_aff = obs.counter(
+            "serving_frontdoor_affinity_hits_total",
+            "routes that hit a prefix-affinity match", ("replica",))
+
+    @property
+    def routed(self) -> int:
+        return int(self._c_routed.total())
+
+    @property
+    def affinity_hits(self) -> int:
+        return int(self._c_aff.total())
 
     def _affinity(self, rep: Replica, req: Request) -> int:
         pc = rep.run.sched.prefix_cache
@@ -140,9 +156,9 @@ class FrontDoor:
                            -run.sched.allocator.n_free, busy, i, rep))
         scored.sort(key=lambda t: t[:4])
         aff, _free, _busy, _i, best = scored[0]
-        self.routed += 1
+        self._c_routed.inc(1.0, (best.name,))
         if aff < 0:
-            self.affinity_hits += 1
+            self._c_aff.inc(1.0, (best.name,))
         return best
 
     def stats(self) -> dict:
@@ -166,7 +182,8 @@ class ServingCluster:
     @classmethod
     def from_plan(cls, model, params, plan: ServingPlan, *,
                   faults: FaultPlan | None = None,
-                  recovery: RecoveryPolicy | None = None
+                  recovery: RecoveryPolicy | None = None,
+                  obs: Observability | None = None
                   ) -> "ServingCluster":
         """Deploy a :class:`~repro.serving.plan.ServingPlan`: build the
         compiled engine from the plan's cache geometry / prefill mode /
@@ -176,13 +193,15 @@ class ServingCluster:
         engine = PagedServingEngine.from_plan(model, plan, faults=faults,
                                               recovery=recovery)
         return cls(engine, params, n_replicas=plan.n_replicas,
-                   faults=faults, recovery=recovery, health=plan.health)
+                   faults=faults, recovery=recovery, health=plan.health,
+                   obs=obs)
 
     def __init__(self, engine: PagedServingEngine, params,
                  n_replicas: int = 2, *,
                  faults: FaultPlan | None = None,
                  recovery: RecoveryPolicy | None = None,
-                 health: HealthPolicy | None = None):
+                 health: HealthPolicy | None = None,
+                 obs: Observability | None = None):
         if n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
         self.engine = engine
@@ -192,6 +211,21 @@ class ServingCluster:
         self.health = health if health is not None else HealthPolicy()
         t0 = time.perf_counter()
         self.clock = lambda: time.perf_counter() - t0
+        # one metrics store + tracer for the whole cluster; each replica
+        # run gets a for_replica() view that binds its label value
+        if obs is None:
+            obs = Observability.from_policy(engine.plan.observability)
+        self.obs = obs
+        self.tracer = obs.tracer
+        self._c_failover = obs.counter(
+            "serving_failover_total",
+            "cross-replica request moves, by kind", ("kind",))
+        self._c_health = obs.counter(
+            "serving_replica_health_transitions_total",
+            "replica state transitions", ("replica", "state"))
+        self._c_miss = obs.counter(
+            "serving_heartbeat_misses_total",
+            "consecutive-miss ticks charged to a replica", ("replica",))
         # durable cluster: one root journal (the plan JSON + cluster-
         # level dead letters) and one subdirectory journal per replica,
         # all under plan.durability.journal_dir; RestartRecovery merges
@@ -207,12 +241,34 @@ class ServingCluster:
         self.replicas = [Replica(name=f"r{i}",
                                  run=self._fresh_run(f"r{i}"))
                          for i in range(n_replicas)]
-        self.front_door = FrontDoor(self.replicas)
+        self.front_door = FrontDoor(self.replicas, obs=obs)
         self.dead: list[Request] = []   # cluster-level dead letters
         self.rounds = 0
-        self.n_migrated = 0             # failovers via verified image
-        self.n_restarted = 0            # failovers via full restart
-        self.n_drained = 0              # graceful drain migrations
+        if self.faults is not None:
+            # re-attach the taps at cluster scope: replica-level sites
+            # fire here (outside any single run), so the trace hook's
+            # boundary must be the round counter, not one run's boundary
+            self.faults.metrics = obs.counter(
+                "serving_fault_fires_total",
+                "injected fault fires, by site", ("site",))
+            if self.tracer is not None:
+                self.faults.trace_hook = (
+                    lambda site, k: self.tracer.event(
+                        None, "FAULT", self.rounds, self.clock(),
+                        site=site, opportunity=k))
+
+    # failover totals as registry thin views
+    @property
+    def n_migrated(self) -> int:        # failovers via verified image
+        return int(self._c_failover.value(("migrated",)))
+
+    @property
+    def n_restarted(self) -> int:       # failovers via full restart
+        return int(self._c_failover.value(("restarted",)))
+
+    @property
+    def n_drained(self) -> int:         # graceful drain migrations
+        return int(self._c_failover.value(("drained",)))
 
     def _fresh_run(self, name: str = "") -> EngineRun:
         journal = None
@@ -225,7 +281,8 @@ class ServingCluster:
                                                 faults=self.faults)
         return EngineRun(self.engine, self.params, faults=self.faults,
                          recovery=self.recovery, clock=self.clock,
-                         journal=journal)
+                         journal=journal,
+                         obs=self.obs.for_replica(name or "r?"))
 
     def _replica(self, name: str) -> Replica:
         for r in self.replicas:
@@ -245,17 +302,23 @@ class ServingCluster:
         return True
 
     # ------------------------------------------------------ health model
+    def _set_state(self, rep: Replica, state: str) -> None:
+        if rep.state != state:
+            rep.state = state
+            self._c_health.inc(1.0, (rep.name, state))
+
     def _beat(self, rep: Replica) -> None:
         rep.missed = 0
         if rep.state == SUSPECT:
-            rep.state = HEALTHY
+            self._set_state(rep, HEALTHY)
 
     def _miss(self, rep: Replica) -> None:
         rep.missed += 1
+        self._c_miss.inc(1.0, (rep.name,))
         if rep.missed >= self.health.dead_after:
-            rep.state = DEAD
+            self._set_state(rep, DEAD)
         elif rep.missed >= self.health.suspect_after:
-            rep.state = SUSPECT
+            self._set_state(rep, SUSPECT)
 
     # -------------------------------------------------------- one round
     def step_round(self) -> bool:
@@ -286,7 +349,8 @@ class ServingCluster:
                     # single-engine run loop)
                     rep.run.note_stall()
             except EngineStalledError:
-                rep.state, rep.cause = DEAD, "watchdog"
+                self._set_state(rep, DEAD)
+                rep.cause = "watchdog"
                 continue
             if outcome != "idle":
                 progress = True
@@ -377,10 +441,13 @@ class ServingCluster:
                          f"{rep.name}", site=rep.cause, replica=rep.name)
                 continue
             target.run.sched.rm.requeue(req)
-            if req.swap is not None:
-                self.n_migrated += 1
-            else:
-                self.n_restarted += 1
+            kind = "migrated" if req.swap is not None else "restarted"
+            self._c_failover.inc(1.0, (kind,))
+            if self.tracer is not None:
+                self.tracer.event(req.rid, "MIGRATE", self.rounds,
+                                  self.clock(), src=rep.name,
+                                  dst=target.name, kind=kind,
+                                  cause=rep.cause)
 
     # ------------------------------------------------- rolling restarts
     def drain(self, name: str) -> int:
@@ -393,9 +460,9 @@ class ServingCluster:
         if not rep.live:
             raise ValueError(f"cannot drain replica {name!r} in state "
                              f"{rep.state}")
-        rep.state = DRAINING
+        self._set_state(rep, DRAINING)
         moved = rep.run.evacuate()
-        rep.state = DOWN
+        self._set_state(rep, DOWN)
         for req in moved:
             if req.swap is not None and self._image_intact(req):
                 req.swap.verified = True
@@ -411,7 +478,12 @@ class ServingCluster:
                     site="drain", replica=name)
                 continue
             target.run.sched.rm.requeue(req)
-            self.n_drained += 1
+            self._c_failover.inc(1.0, ("drained",))
+            if self.tracer is not None:
+                self.tracer.event(req.rid, "MIGRATE", self.rounds,
+                                  self.clock(), src=name,
+                                  dst=target.name, kind="drained",
+                                  cause="drain")
         return len(moved)
 
     def close_journals(self) -> None:
@@ -434,7 +506,7 @@ class ServingCluster:
         if rep.run.journal is not None:
             rep.run.journal.close()
         rep.run = self._fresh_run(rep.name)
-        rep.state = HEALTHY
+        self._set_state(rep, HEALTHY)
         rep.missed = 0
         rep.crashed = rep.hung = rep.fenced = False
         rep.cause = "heartbeat_loss"
@@ -471,7 +543,11 @@ class ServingCluster:
                 wait = queue[nxt].arrival - self.clock()
                 if wait > 0:
                     time.sleep(wait)
-        return self.stats()
+        out = self.stats()
+        pol = self.obs.policy
+        if self.obs.enabled and pol is not None and pol.export_dir:
+            out["exports"] = self.obs.export(pol.export_dir)
+        return out
 
     # ------------------------------------------------------------- stats
     @property
@@ -510,7 +586,8 @@ class ServingCluster:
                             for r in self.replicas},
                "front_door": self.front_door.stats(),
                "dead_letter_records": [r.failure.record() for r in dead
-                                       if r.failure is not None]}
+                                       if r.failure is not None],
+               "metrics": self.obs.summary()}
         if self.faults is not None:
             out["faults"] = self.faults.summary()
         return out

@@ -59,6 +59,7 @@ import numpy as np
 
 from repro.serving.faults import (FaultPlan, InjectedFault, ProcessCrashed,
                                   corrupt_image, image_checksum)
+from repro.serving.observe import Observability, render_summary
 from repro.serving.paged_cache import (AllocatorError, PagedCacheConfig,
                                        TRASH_PAGE, init_paged_cache,
                                        supports_paging)
@@ -395,7 +396,7 @@ class PagedServingEngine:
     def run(self, requests: list[Request], params, *,
             faults: FaultPlan | None = None,
             recovery: RecoveryPolicy | None = None,
-            journal=None) -> dict:
+            journal=None, obs: Observability | None = None) -> dict:
         """Serve ``requests`` (honoring their ``arrival`` offsets) to
         completion.  Mutates each request in place (tokens, t_admitted,
         t_done, all relative to engine start) and returns run counters.
@@ -432,7 +433,7 @@ class PagedServingEngine:
                 faults=faults if faults is not None else self.faults)
             own_journal = True
         er = EngineRun(self, params, faults=faults, recovery=recovery,
-                       journal=journal)
+                       journal=journal, obs=obs)
         queue = sorted(requests, key=lambda q: q.arrival)
         nxt_arrival = 0
         try:
@@ -456,7 +457,11 @@ class PagedServingEngine:
                         # boundary produced none — count it toward the
                         # watchdog instead of busy-spinning
                         er.note_stall()
-            return er.result()
+            out = er.result()
+            pol = er.obs.policy
+            if er.obs.enabled and pol is not None and pol.export_dir:
+                out["exports"] = er.obs.export(pol.export_dir)
+            return out
         finally:
             if own_journal:
                 journal.close()     # no-op after a crash() in step()
@@ -482,7 +487,8 @@ class EngineRun:
     def __init__(self, engine: PagedServingEngine, params, *,
                  faults: FaultPlan | None = None,
                  recovery: RecoveryPolicy | None = None,
-                 clock=None, journal=None):
+                 clock=None, journal=None,
+                 obs: Observability | None = None):
         self.engine = engine
         self.params = params
         pcfg = engine.pcfg
@@ -490,9 +496,42 @@ class EngineRun:
         self.faults = faults if faults is not None else engine.faults
         policy = recovery if recovery is not None else engine.recovery
         self.policy = policy if policy is not None else RecoveryPolicy()
+        if obs is None:
+            obs = Observability.from_policy(engine.plan.observability)
+        self.obs = obs
+        self.tracer = obs.tracer
+        self._rep = obs.replica
         self.sched = ContinuousBatchingScheduler.from_plan(
-            engine.plan, faults=self.faults)
+            engine.plan, faults=self.faults, obs=obs)
         self.rec = RecoveryManager(self.policy, self.sched)
+        # latency histograms (NULL_METRIC when telemetry is off) + the
+        # per-request records result() exports either way
+        rep = ("replica",)
+        self._h_queue = obs.histogram(
+            "serving_queue_wait_seconds",
+            "submit (arrival) to admission", rep)
+        self._h_ttft = obs.histogram(
+            "serving_ttft_seconds",
+            "submit (arrival) to first token on device", rep)
+        self._h_e2e = obs.histogram(
+            "serving_e2e_latency_seconds",
+            "submit (arrival) to completion", rep)
+        self._h_decode = obs.histogram(
+            "serving_decode_seconds_per_token",
+            "segment dispatch wall over tokens committed", rep)
+        self._h_admit = obs.histogram(
+            "serving_admission_batch_seconds",
+            "boundary admission wall (restores + prefills)", rep)
+        self._g_free = obs.gauge(
+            "serving_pool_free_pages", "allocator free pages", rep)
+        self._g_held = obs.gauge(
+            "serving_pool_held_pages", "allocator held pages", rep)
+        self._g_running = obs.gauge(
+            "serving_running_requests", "occupied slots", rep)
+        self._g_queued = obs.gauge(
+            "serving_queued_requests",
+            "pending + preempted across tenants", rep)
+        self.request_records: list[dict] = []
         # the write-ahead journal (serving/journal.py), when durability
         # is on: lifecycle records are emitted inside the boundary
         # protocol below, and the recovery manager shares the writer so
@@ -519,6 +558,19 @@ class EngineRun:
             t0 = time.perf_counter()
             clock = lambda: time.perf_counter() - t0   # noqa: E731
         self.clock = clock          # shared by all replicas of a cluster
+        if self.faults is not None:
+            # telemetry taps: fired AFTER a site's draw, outside the RNG
+            # path, so attaching them never perturbs a chaos schedule
+            self.faults.metrics = obs.counter(
+                "serving_fault_fires_total",
+                "injected fault fires, by site", ("site",))
+            if self.tracer is not None:
+                self.faults.trace_hook = (
+                    lambda site, k: self.tracer.event(
+                        None, "FAULT", self.boundary, self.clock(),
+                        site=site, opportunity=k))
+        if journal is not None:
+            journal.bind_metrics(obs)
 
     # ----------------------------------------------------------- frontend
     def submit(self, req: Request) -> None:
@@ -527,6 +579,11 @@ class EngineRun:
         # so there is nothing to make durable
         if self.journal is not None:
             self.journal.submit(req)
+        if self.tracer is not None:
+            self.tracer.event(req.rid, "SUBMIT", self.boundary,
+                              self.clock(), tenant=req.tenant,
+                              prompt_len=req.prompt_len,
+                              max_new=req.max_new_tokens)
 
     @property
     def has_work(self) -> bool:
@@ -549,8 +606,43 @@ class EngineRun:
                 req.t_done = now
                 self.sched.complete(slot)
                 self._park_slot(slot)
+                self._record_done(req)
                 if self.journal is not None:
                     self.journal.complete(req)
+
+    def _request_record(self, req: Request) -> dict:
+        """Measured per-request latencies, all relative to arrival —
+        result()['requests'] is the telemetry source SLO gates read
+        instead of recomputing from Request fields."""
+        arr = req.arrival
+        return {"rid": req.rid, "tenant": req.tenant,
+                "queue_wait_s": None if req.t_admitted is None
+                else req.t_admitted - arr,
+                "ttft_s": None if req.t_first is None
+                else req.t_first - arr,
+                "e2e_s": None if req.t_done is None
+                else req.t_done - arr,
+                "n_tokens": len(req.tokens),
+                "preemptions": req.n_preempted,
+                "retries": req.n_retries,
+                "dead": req.failure is not None}
+
+    def _record_done(self, req: Request) -> None:
+        rec = self._request_record(req)
+        self.request_records.append(rec)
+        lab = (self._rep,)
+        if rec["queue_wait_s"] is not None:
+            self._h_queue.observe(rec["queue_wait_s"], lab)
+        if rec["ttft_s"] is not None:
+            self._h_ttft.observe(rec["ttft_s"], lab)
+        if rec["e2e_s"] is not None:
+            self._h_e2e.observe(rec["e2e_s"], lab)
+        if self.tracer is not None:
+            self.tracer.event(req.rid, "COMPLETE", self.boundary,
+                              req.t_done or 0.0,
+                              n_tokens=len(req.tokens),
+                              preemptions=req.n_preempted,
+                              retries=req.n_retries)
 
     def _start_request(self, req: Request, first_tok: int,
                        now: float) -> None:
@@ -562,6 +654,8 @@ class EngineRun:
         self.active[slot] = req.max_new_tokens > 1
         req.tokens = [int(first_tok)]
         req.t_admitted = now
+        if req.t_first is None:
+            req.t_first = now
 
     def note_stall(self) -> None:
         """The deduplicated no-progress watchdog: both the
@@ -620,6 +714,9 @@ class EngineRun:
             req.restore_blocks = (0, 0)
         else:
             self.rec.reset_for_restart(req)
+        if self.tracer is not None:
+            self.tracer.event(req.rid, "ADMIT_FAIL", self.boundary, now,
+                              kind=kind)
         self.rec.hold(req, f"injected {kind} dispatch fault",
                       self.boundary, now,
                       site="dispatch_restore" if kind == "restore"
@@ -659,7 +756,7 @@ class EngineRun:
         # checksum-verified exactly once (a corrupted/lost image
         # becomes a restart *before* its restore is planned); under
         # sustained pressure, stale queued work is shed (opt-in)
-        rec.release_due(boundary)
+        rec.release_due(boundary, clock())
         rec.verify_swaps(boundary, clock())
         rec.shed_stalled(boundary, clock())
         # growth-on-demand: back the next segment's writes, possibly
@@ -675,9 +772,19 @@ class EngineRun:
                 # here on restores this request through the verified-
                 # swap-image lane instead of restarting it
                 self.journal.spill_image(req)
+            if self.tracer is not None:
+                self.tracer.event(req.rid, "PREEMPT", boundary, clock(),
+                                  by=req.preempted_by,
+                                  pages=len(req.swap.pages),
+                                  n_preempted=req.n_preempted)
         # grown block tables: new pages append to the owned prefix
         for slot, req in sched.running.items():
             bt[slot, :len(req.pages)] = req.pages
+        if self.tracer is not None:
+            for slot in sorted(sched.running):
+                if sched.running[slot].stalled:
+                    self.tracer.event(sched.running[slot].rid, "STALL",
+                                      boundary, clock())
         admitted = sched.try_admit()
         rec.note_admitted(admitted)
         fresh = [r for r in admitted if r.swap is None]
@@ -757,10 +864,22 @@ class EngineRun:
                 for req in ok_admitted:
                     self.journal.admit(req,
                                        restore=id(req) in rest_ids)
+            if self.tracer is not None:
+                # likewise before finish_boundary, for the restore flag
+                rest_ids = set(map(id, restored))
+                for req in ok_admitted:
+                    self.tracer.event(req.rid, "ADMIT", boundary,
+                                      clock(),
+                                      restore=id(req) in rest_ids,
+                                      slot=req.slot,
+                                      pages=len(req.pages or []),
+                                      shared_tokens=req.shared_tokens)
             sched.finish_boundary(ok_admitted)
             for kind, req in failed_admissions:
                 self._unwind_admission(kind, req)
-            self.prefill_s += time.perf_counter() - t_pf
+            dt_pf = time.perf_counter() - t_pf
+            self.prefill_s += dt_pf
+            self._h_admit.observe(dt_pf, (self._rep,))
         self._retire_finished(clock())
         if not sched.running:
             return "idle"
@@ -820,7 +939,7 @@ class EngineRun:
             # segment skipped wholesale: no state moved, nothing to
             # roll back — the boundary simply retries.  Bounded by
             # the plan's max_fires.
-            rec.segment_dispatch_faults += 1
+            rec._c_dispatch_faults.inc(1.0, (rec._rep,))
             return "skipped"
         t_seg = time.perf_counter()
         cache = dict(self.cache, block_tables=jnp.asarray(bt),
@@ -834,8 +953,12 @@ class EngineRun:
         self.cache = cache
         self.n_segments += 1
         toks = np.asarray(toks)
-        self.decode_s += time.perf_counter() - t_seg
+        dt_seg = time.perf_counter() - t_seg
+        self.decode_s += dt_seg
         emits = np.asarray(emits)
+        n_emitted = int(emits.sum())
+        if n_emitted:
+            self._h_decode.observe(dt_seg / n_emitted, (self._rep,))
         # np.array (copy): host bookkeeping mutates these in place
         self.tok = np.array(tok_d)
         self.active = np.array(act_d)
@@ -845,6 +968,12 @@ class EngineRun:
         for slot, req in sched.running.items():
             req.tokens.extend(
                 int(t) for t in toks[emits[:, slot], slot])
+        if self.tracer is not None:
+            for slot in sorted(sched.running):
+                n_em = int(emits[:, slot].sum())
+                if n_em:
+                    self.tracer.event(sched.running[slot].rid, "SEGMENT",
+                                      boundary, clock(), tokens=n_em)
         # anti-livelock: surviving one generated segment makes a
         # request preemptable again
         sched.end_segment(slot for slot in sched.running
@@ -865,6 +994,15 @@ class EngineRun:
             # fail loudly rather than spin if a policy bug lands
             self.note_stall()
         self._retire_finished(clock())
+        if self.obs.enabled:
+            alloc = sched.allocator
+            lab = (self._rep,)
+            self._g_free.set(alloc.n_free, lab)
+            self._g_held.set(alloc.n_held, lab)
+            self._g_running.set(len(sched.running), lab)
+            self._g_queued.set(
+                sum(len(st.pending) + len(st.preempted)
+                    for st in sched.rm._tenants.values()), lab)
         return "ran"
 
     # ------------------------------------------------------------- drain
@@ -902,6 +1040,13 @@ class EngineRun:
                "decode_s": self.decode_s,     # summed segment dispatches
                "wall_s": self.clock(),
                "recovery": self.rec.stats(),
+               # measured per-request latency records (dead letters
+               # included) + the registry roll-up: SLO gates and the
+               # traffic replay feature vector read from here instead of
+               # re-deriving from Request fields
+               "requests": [dict(r) for r in self.request_records]
+               + [self._request_record(r) for r in self.rec.dead],
+               "metrics": render_summary(self.obs.registry),
                **self.sched.stats()}
         if self.faults is not None:
             out["faults"] = self.faults.summary()

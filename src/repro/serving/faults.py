@@ -157,6 +157,13 @@ class FaultPlan:
         self.opportunities = {site: 0 for site in SITES}
         self.fires = {site: 0 for site in SITES}
         self.log: list[tuple[str, int]] = []   # (site, opportunity idx)
+        # optional telemetry taps (serving/observe.py), attached by the
+        # engine/cluster when observability is threaded through: a
+        # Counter handle labeled (site,) and a (site, opportunity)
+        # callable emitting a FAULT trace event.  Both stay outside the
+        # draw path, so attaching them never perturbs a schedule.
+        self.metrics = None
+        self.trace_hook = None
 
     # ------------------------------------------------------ constructors
     @classmethod
@@ -190,6 +197,10 @@ class FaultPlan:
             return False
         self.fires[site] += 1
         self.log.append((site, k))
+        if self.metrics is not None:
+            self.metrics.inc(1.0, (site,))
+        if self.trace_hook is not None:
+            self.trace_hook(site, k)
         return True
 
     def gate(self, site: str) -> None:

@@ -77,6 +77,7 @@ from typing import Any
 import numpy as np
 
 from repro.serving.faults import FaultPlan, image_checksum
+from repro.serving.observe import NULL_METRIC
 from repro.serving.plan import DurabilityPolicy, ServingPlan
 
 
@@ -223,6 +224,14 @@ class JournalWriter:
         self.n_appended = 0
         self.n_flushes = 0
         self.n_spilled = 0
+        # telemetry handles (serving/observe.py); NULL_METRIC until an
+        # EngineRun binds its Observability via bind_metrics() — the
+        # plain counters above stay the source for stats() either way
+        self._m_appends = NULL_METRIC
+        self._m_fsyncs = NULL_METRIC
+        self._m_bytes = NULL_METRIC
+        self._m_spills = NULL_METRIC
+        self._rep = ""
         # rid -> (journaled committed-token count) to skip no-op
         # checkpoint entries, and rid -> spilled image path for GC
         self._ckpt_counts: dict[Any, int] = {}
@@ -259,6 +268,28 @@ class JournalWriter:
         if plan is not None:
             w.write_plan(plan.to_dict())
         return w
+
+    def bind_metrics(self, obs) -> None:
+        """Attach an Observability's registry handles.  Counters here
+        are real only when telemetry is enabled (unlike the serving
+        ledgers, the plain ``n_*`` attributes already serve stats());
+        idempotent, so re-binding on crash-restart recovery is safe."""
+        if not obs.enabled:
+            return
+        rep = ("replica",)
+        self._rep = obs.replica
+        self._m_appends = obs.counter(
+            "serving_journal_appends_total",
+            "WAL records staged for append", rep)
+        self._m_fsyncs = obs.counter(
+            "serving_journal_fsyncs_total",
+            "WAL fsync batches reaching disk", rep)
+        self._m_bytes = obs.counter(
+            "serving_journal_bytes_total",
+            "WAL bytes written (framed, post-batch)", rep)
+        self._m_spills = obs.counter(
+            "serving_journal_images_spilled_total",
+            "host swap images spilled beside the WAL", rep)
 
     # ------------------------------------------------------------ frames
     def _seg_path(self) -> str:
@@ -303,6 +334,7 @@ class JournalWriter:
             return
         self._buf.append(frame)
         self.n_appended += 1
+        self._m_appends.inc(1.0, (self._rep,))
         if flush:
             self.flush()
 
@@ -322,6 +354,8 @@ class JournalWriter:
         f.flush()
         os.fsync(f.fileno())
         self.n_flushes += 1
+        self._m_fsyncs.inc(1.0, (self._rep,))
+        self._m_bytes.inc(float(len(data)), (self._rep,))
         self._seg_written += len(data)
         if self._seg_written >= self.segment_bytes:
             self._rotate()
@@ -420,6 +454,7 @@ class JournalWriter:
                         np.asarray(sw.host_v))
             self._images[req.rid] = path
             self.n_spilled += 1
+            self._m_spills.inc(1.0, (self._rep,))
         self.append(SWAP_IMAGE, {
             "rid": req.rid, "n_tokens": int(sw.n_tokens),
             "tokens": [int(t) for t in req.tokens],
@@ -764,6 +799,12 @@ class RestartRecovery:
                  if r.image_file is not None})
             er = EngineRun(eng, params, faults=faults, recovery=policy,
                            journal=journal)
+            lanes = er.obs.counter(
+                "serving_journal_replay_requests_total",
+                "restart-recovery replayed requests, by lane", ("lane",))
+            for lane, n in built["counters"].items():
+                if n:
+                    lanes.inc(float(n), (lane,))
             for req in inflight:
                 er.sched.rm.requeue(req)
             while er.has_work:

@@ -102,6 +102,44 @@ class DurabilityPolicy:
                              "must fit at least one framed record)")
 
 
+@dataclasses.dataclass(frozen=True)
+class ObservabilityPolicy:
+    """Telemetry knobs (serving/observe.py).
+
+    ``enabled`` arms the full layer for runs built from the plan:
+    latency histograms, pool/queue gauges, the request-lifecycle
+    tracer, and (when ``export_dir`` is set) a Prometheus text export
+    plus a JSONL trace written at run end.  Counters stay live either
+    way — they back the ``stats()`` views — so disabling telemetry
+    only strips the probes that cost something (a disabled probe is
+    one attribute lookup against a shared no-op handle).
+
+    ``histogram_buckets`` overrides the default exponential latency
+    grid (strictly increasing upper bounds, seconds); empty means the
+    default.  ``trace`` turns the tracer off independently for
+    metrics-only runs.
+
+    Defined here (not serving/observe.py) for the same reason as
+    :class:`HealthPolicy`: the plan carries the knob group without
+    importing the machinery."""
+    enabled: bool = False
+    export_dir: str = ""
+    histogram_buckets: tuple = ()
+    trace: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "histogram_buckets",
+                           tuple(float(b)
+                                 for b in self.histogram_buckets))
+        b = self.histogram_buckets
+        if any(x <= 0 for x in b) or list(b) != sorted(set(b)):
+            raise ValueError("histogram_buckets must be positive and "
+                             f"strictly increasing: {b}")
+        if self.export_dir and not self.enabled:
+            raise ValueError("export_dir set but observability "
+                             "disabled — nothing would be written")
+
+
 def _filtered(cls, d: dict[str, Any]):
     """Drop-unknown/default-missing constructor for a dataclass — the
     PagedCacheConfig.from_dict forward-compat contract, shared by every
@@ -123,6 +161,8 @@ class ServingPlan:
     health: HealthPolicy = dataclasses.field(default_factory=HealthPolicy)
     durability: DurabilityPolicy = dataclasses.field(
         default_factory=DurabilityPolicy)
+    observability: ObservabilityPolicy = dataclasses.field(
+        default_factory=ObservabilityPolicy)
     # workload sizing the pool geometry was resolved against
     max_prompt_len: int = 32
     max_new_tokens: int = 16
@@ -168,6 +208,7 @@ class ServingPlan:
                 tenants=(), n_replicas: int = 1,
                 health: HealthPolicy | None = None,
                 durability: DurabilityPolicy | None = None,
+                observability: ObservabilityPolicy | None = None,
                 cache_path: str | None = None,
                 **cache_overrides: Any) -> "ServingPlan":
         """The one provenance-tracked readback-and-geometry step.
@@ -223,12 +264,17 @@ class ServingPlan:
         for k in cache_overrides:
             prov[k] = "explicit"
         prov["durability"] = "default" if durability is None else "explicit"
+        prov["observability"] = \
+            "default" if observability is None else "explicit"
         return cls(arch=str(getattr(cfg, "name", "")), cache=cache,
                    prefill_mode=prefill_mode, cache_dtype=cache_dtype,
                    tenants=tuple(tenants or ()), n_replicas=n_replicas,
                    health=health if health is not None else HealthPolicy(),
                    durability=(durability if durability is not None
                                else DurabilityPolicy()),
+                   observability=(observability
+                                  if observability is not None
+                                  else ObservabilityPolicy()),
                    max_prompt_len=max_prompt_len,
                    max_new_tokens=max_new_tokens, provenance=prov)
 
@@ -245,6 +291,10 @@ class ServingPlan:
             "n_replicas": self.n_replicas,
             "health": dataclasses.asdict(self.health),
             "durability": dataclasses.asdict(self.durability),
+            "observability": {
+                **dataclasses.asdict(self.observability),
+                "histogram_buckets":
+                    list(self.observability.histogram_buckets)},
             "max_prompt_len": self.max_prompt_len,
             "max_new_tokens": self.max_new_tokens,
             "provenance": dict(self.provenance),
@@ -269,6 +319,9 @@ class ServingPlan:
         if isinstance(kw.get("durability"), dict):
             kw["durability"] = _filtered(DurabilityPolicy,
                                          kw["durability"])
+        if isinstance(kw.get("observability"), dict):
+            kw["observability"] = _filtered(ObservabilityPolicy,
+                                            kw["observability"])
         if "provenance" in kw:
             kw["provenance"] = dict(kw["provenance"])
         return cls(**kw)

@@ -151,13 +151,57 @@ class RecoveryManager:
         self._quarantine: list[tuple["Request", int]] = []
         self.dead: list["Request"] = []
         self._queued_since: dict[Any, int] = {}   # rid -> boundary
-        # counters for stats()/diagnostics
-        self.quarantines = 0
-        self.restarts = 0                # quarantines that lost their image
-        self.swap_faults_detected = 0
-        self.shed = 0
-        self.segment_dispatch_faults = 0
+        # stats()/diagnostic counters live in the scheduler's metrics
+        # registry; the historical attributes read back through it, and
+        # the tracer (None unless telemetry is on) gets the QUARANTINE/
+        # RETRY/DEAD_LETTER lifecycle events
+        self.obs = sched.obs
+        self.tracer = self.obs.tracer
+        self._rep = self.obs.replica
+        rep = ("replica",)
+        self._c_quar = self.obs.counter(
+            "serving_quarantines_total",
+            "requests quarantined, by fault site", ("replica", "site"))
+        self._c_restarts = self.obs.counter(
+            "serving_restarts_total",
+            "quarantines that lost their swap image", rep)
+        self._c_swapf = self.obs.counter(
+            "serving_swap_faults_total",
+            "corrupt/lost swap images detected pre-restore", rep)
+        self._c_shed = self.obs.counter(
+            "serving_shed_total",
+            "queued requests shed under sustained pressure", rep)
+        self._c_dispatch_faults = self.obs.counter(
+            "serving_segment_dispatch_faults_total",
+            "decode segment dispatches that raised", rep)
+        self._c_retries = self.obs.counter(
+            "serving_retries_total",
+            "quarantined requests requeued after backoff", rep)
+        self._c_inv = self.obs.counter(
+            "serving_invariant_violations_total",
+            "boundary-audit violations recorded", rep)
         self.invariant_violations: list[str] = []
+
+    # --------------------------------------------- registry thin views
+    @property
+    def quarantines(self) -> int:
+        return int(self._c_quar.total(replica=self._rep))
+
+    @property
+    def restarts(self) -> int:
+        return int(self._c_restarts.total(replica=self._rep))
+
+    @property
+    def swap_faults_detected(self) -> int:
+        return int(self._c_swapf.total(replica=self._rep))
+
+    @property
+    def shed(self) -> int:
+        return int(self._c_shed.total(replica=self._rep))
+
+    @property
+    def segment_dispatch_faults(self) -> int:
+        return int(self._c_dispatch_faults.total(replica=self._rep))
 
     @property
     def has_quarantined(self) -> bool:
@@ -184,9 +228,14 @@ class RecoveryManager:
         its retry count and either park it for its backoff or dead-letter
         it when retries are exhausted.  Returns False on dead-letter."""
         req.n_retries += 1
-        self.quarantines += 1
+        self._c_quar.inc(1.0, (self._rep, site))
         if req.swap is None:
-            self.restarts += 1
+            self._c_restarts.inc(1.0, (self._rep,))
+        if self.tracer is not None:
+            self.tracer.event(req.rid, "QUARANTINE", boundary, now,
+                              site=site, reason=reason,
+                              retries=req.n_retries,
+                              has_image=req.swap is not None)
         if req.n_retries > self.policy.max_retries:
             self.dead_letter(req, f"retries exhausted after {reason}",
                              boundary, now, site=site)
@@ -194,7 +243,7 @@ class RecoveryManager:
         self._quarantine.append((req, boundary + self.backoff(req)))
         return True
 
-    def release_due(self, boundary: int) -> int:
+    def release_due(self, boundary: int, now: float = 0.0) -> int:
         """Requeue quarantined requests whose backoff expired: verified
         host image → the tenant's preempted lane (one-dispatch restore);
         none → the pending lane (full restart)."""
@@ -205,6 +254,11 @@ class RecoveryManager:
                             if b > boundary]
         for req, _ in due:
             self.rm.requeue(req)
+            self._c_retries.inc(1.0, (self._rep,))
+            if self.tracer is not None:
+                self.tracer.event(req.rid, "RETRY", boundary, now,
+                                  retries=req.n_retries,
+                                  has_image=req.swap is not None)
         return len(due)
 
     def drain_quarantined(self) -> "list[Request]":
@@ -241,9 +295,12 @@ class RecoveryManager:
                                     retries=req.n_retries, site=site,
                                     ckpt_tokens=req.ckpt_tokens)
         req.t_done = now
-        self.rm.state(req.tenant).dead_lettered += 1
-        self.rm.dead_letters += 1
+        self.rm.note_dead_letter(req, site)
         self.dead.append(req)
+        if self.tracer is not None:
+            self.tracer.event(req.rid, "DEAD_LETTER", boundary, now,
+                              site=site, reason=reason,
+                              retries=req.n_retries)
         if self.journal is not None:
             self.journal.dead_letter(req.failure.record())
 
@@ -265,7 +322,7 @@ class RecoveryManager:
                                        == image_checksum(sw.host_k,
                                                          sw.host_v))
                     if not ok:
-                        self.swap_faults_detected += 1
+                        self._c_swapf.inc(1.0, (self._rep,))
                         self.reset_for_restart(req)
                         self.hold(req, "swap image corrupt or lost",
                                   boundary, now,
@@ -302,7 +359,7 @@ class RecoveryManager:
                             req, f"shed after {boundary - first} "
                             f"boundaries queued under pressure",
                             boundary, now, site="shed")
-                        self.shed += 1
+                        self._c_shed.inc(1.0, (self._rep,))
                         n += 1
                     else:
                         keep.append(req)
@@ -349,6 +406,8 @@ class RecoveryManager:
         for req, why in bad:
             self.invariant_violations.append(f"{req.rid!r}: {why}")
         self.invariant_violations.extend(glob)
+        if bad or glob:
+            self._c_inv.inc(float(len(bad) + len(glob)), (self._rep,))
         return bad, glob
 
     # --------------------------------------------------------------- stats

@@ -58,6 +58,7 @@ import math
 from collections import deque
 from typing import TYPE_CHECKING, Any, Iterable
 
+from repro.serving.observe import Observability
 from repro.serving.paged_cache import (PageAllocator, PagedCacheConfig,
                                        PrefixCache, PrefixMatch)
 
@@ -116,16 +117,38 @@ class SwapState:
 @dataclasses.dataclass
 class _TenantState:
     cfg: TenantConfig
+    rm: Any = None                      # owning ResourceManager backref
     pending: deque = dataclasses.field(default_factory=deque)
     preempted: deque = dataclasses.field(default_factory=deque)
     deficit: float = 0.0                # DRR credit, in pages
     charged: int = 0                    # pages currently charged
-    # lifetime counters (the bench/JSON schema)
-    admitted: int = 0
-    preempted_n: int = 0
-    restored: int = 0
-    pages_swapped: int = 0              # pages device_get'd out on preempt
-    dead_lettered: int = 0              # requests ended in RequestFailed
+
+    # Lifetime counters (the bench/JSON schema) are thin views over the
+    # metrics registry — the registry is the only bookkeeping, these
+    # properties just filter it down to (replica, tenant).
+    def _ctr(self, handle) -> int:
+        return int(handle.value((self.rm._rep, self.cfg.name)))
+
+    @property
+    def admitted(self) -> int:
+        return self._ctr(self.rm._c_admitted)
+
+    @property
+    def preempted_n(self) -> int:
+        return self._ctr(self.rm._c_preempt)
+
+    @property
+    def restored(self) -> int:
+        return self._ctr(self.rm._c_restores)
+
+    @property
+    def pages_swapped(self) -> int:     # pages device_get'd out on preempt
+        return self._ctr(self.rm._c_swap_out)
+
+    @property
+    def dead_lettered(self) -> int:     # requests ended in RequestFailed
+        return int(self.rm._c_dead.total(replica=self.rm._rep,
+                                         tenant=self.cfg.name))
 
     @property
     def has_queued(self) -> bool:
@@ -166,16 +189,16 @@ class ResourceManager:
     """
 
     @classmethod
-    def from_plan(cls, plan, *, faults=None) -> "ResourceManager":
+    def from_plan(cls, plan, *, faults=None, obs=None) -> "ResourceManager":
         """Construct from a :class:`~repro.serving.plan.ServingPlan`:
         pool geometry, tenant roster, and the plan's effective sharing
         flag (prefix sharing requires the batched prefill path)."""
         return cls(plan.cache, plan.tenants or None,
-                   sharing=plan.sharing, faults=faults)
+                   sharing=plan.sharing, faults=faults, obs=obs)
 
     def __init__(self, pcfg: PagedCacheConfig,
                  tenants: Iterable[TenantConfig] | None = None,
-                 *, sharing: bool | None = None, faults=None):
+                 *, sharing: bool | None = None, faults=None, obs=None):
         self.pcfg = pcfg
         self.allocator = PageAllocator(pcfg.n_pages, faults=faults)
         self.sharing = (pcfg.enable_prefix_sharing if sharing is None
@@ -186,20 +209,76 @@ class ResourceManager:
             retain_pages=pcfg.retain_pages) if self.sharing else None
         self._tenants: dict[str, _TenantState] = {}
         for t in tenants or ():
-            self._tenants[t.name] = _TenantState(cfg=t)
+            self._tenants[t.name] = _TenantState(cfg=t, rm=self)
         # with an explicit tenant roster, unknown names are rejected at
         # submit — auto-registering them would hand a typo'd tenant a
         # default (whole-pool) budget and silently void the quotas
         self._closed_roster = bool(self._tenants)
         self._rr = 0                     # DRR rotation origin
         self._admit_seq = 0
-        # totals (per-tenant splits live in _TenantState)
-        self.preemptions = 0
-        self.restores = 0
-        self.pages_swapped_out = 0
-        self.pages_swapped_in = 0
-        self.pages_grown = 0
-        self.dead_letters = 0            # bumped by RecoveryManager
+        # All page-movement counters live in the metrics registry —
+        # labeled (replica, tenant) so a cluster's replicas share one
+        # store — and the legacy attributes/stats() keys read back
+        # through it.  Counters are live even with telemetry disabled
+        # (a fresh disabled Observability per manager keeps independent
+        # engines isolated).
+        self.obs = obs if obs is not None else Observability.disabled()
+        self._rep = self.obs.replica
+        lab = ("replica", "tenant")
+        self._c_admitted = self.obs.counter(
+            "serving_admitted_total",
+            "fresh admissions committed", lab)
+        self._c_preempt = self.obs.counter(
+            "serving_preemptions_total",
+            "requests host-swap preempted", lab)
+        self._c_restores = self.obs.counter(
+            "serving_restores_total",
+            "preempted requests restored", lab)
+        self._c_swap_out = self.obs.counter(
+            "serving_pages_swapped_out_total",
+            "pages device_get to host on preempt", lab)
+        self._c_swap_in = self.obs.counter(
+            "serving_pages_swapped_in_total",
+            "host pages scattered back on restore", lab)
+        self._c_grown = self.obs.counter(
+            "serving_pages_grown_total",
+            "pages added by growth-on-demand", lab)
+        self._c_dead = self.obs.counter(
+            "serving_dead_letters_total",
+            "requests ended in typed RequestFailed",
+            ("replica", "tenant", "site"))
+
+    # ------------------------------------------------- registry thin views
+    # The historical total attributes, as read-only filters over the
+    # shared registry (per-tenant splits live on _TenantState).
+    @property
+    def preemptions(self) -> int:
+        return int(self._c_preempt.total(replica=self._rep))
+
+    @property
+    def restores(self) -> int:
+        return int(self._c_restores.total(replica=self._rep))
+
+    @property
+    def pages_swapped_out(self) -> int:
+        return int(self._c_swap_out.total(replica=self._rep))
+
+    @property
+    def pages_swapped_in(self) -> int:
+        return int(self._c_swap_in.total(replica=self._rep))
+
+    @property
+    def pages_grown(self) -> int:
+        return int(self._c_grown.total(replica=self._rep))
+
+    @property
+    def dead_letters(self) -> int:
+        return int(self._c_dead.total(replica=self._rep))
+
+    def note_dead_letter(self, req: "Request", site: str) -> None:
+        """Called by the recovery layer when a request dead-letters —
+        the one increment behind every dead-letter count."""
+        self._c_dead.inc(1.0, (self._rep, req.tenant, site))
 
     # ------------------------------------------------------------ tenants
     def state(self, name: str) -> _TenantState:
@@ -214,7 +293,7 @@ class ResourceManager:
                 raise ValueError(
                     f"unknown tenant {name!r}: the configured roster is "
                     f"{sorted(self._tenants)}")
-            st = _TenantState(cfg=TenantConfig(name=name))
+            st = _TenantState(cfg=TenantConfig(name=name), rm=self)
             self._tenants[name] = st
         return st
 
@@ -329,7 +408,7 @@ class ResourceManager:
         pages, reason = self.alloc_charged(req, n)
         if pages:
             req.pages.extend(pages)
-            self.pages_grown += len(pages)
+            self._c_grown.inc(len(pages), (self._rep, req.tenant))
         return pages, reason
 
     def share(self, req: "Request", pages: list[int]) -> None:
@@ -400,10 +479,8 @@ class ResourceManager:
                          n_tokens=sl, slot=req.slot)
         req.swap = swap
         st = self.state(req.tenant)
-        st.preempted_n += 1
-        st.pages_swapped += len(swap.pages)
-        self.preemptions += 1
-        self.pages_swapped_out += len(swap.pages)
+        self._c_preempt.inc(1.0, (self._rep, req.tenant))
+        self._c_swap_out.inc(len(swap.pages), (self._rep, req.tenant))
         self.release_request(req)
         if requeue:
             st.preempted.append(req)
@@ -493,11 +570,10 @@ class ResourceManager:
         if restore:
             req.shared_tokens = 0        # restores never re-prefill
             req.shared_pages = 0
-            st = self.state(req.tenant)
-            st.restored += 1
-            self.restores += 1
-            self.pages_swapped_in += max(
-                0, plan.restore_blocks[1] - plan.restore_blocks[0])
+            self._c_restores.inc(1.0, (self._rep, req.tenant))
+            self._c_swap_in.inc(
+                max(0, plan.restore_blocks[1] - plan.restore_blocks[0]),
+                (self._rep, req.tenant))
         else:
             req.shared_pages = plan.n_shared
             req.shared_tokens = match.n_tokens if match else 0
@@ -510,8 +586,7 @@ class ResourceManager:
                 req.cow_src = match.tail_src
                 req.cow_dst = req.pages[(match.n_tokens - 1)
                                         // self.pcfg.page_size]
-            st = self.state(req.tenant)
-            st.admitted += 1
+            self._c_admitted.inc(1.0, (self._rep, req.tenant))
         if self.prefix_cache is not None:
             self.prefix_cache.record(match)
             self.prefix_cache.insert(req.prompt, req.prompt_len, req.pages)

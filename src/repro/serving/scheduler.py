@@ -63,6 +63,7 @@ class Request:
     pages: list[int] | None = None
     tokens: list[int] = dataclasses.field(default_factory=list)
     t_admitted: float | None = None
+    t_first: float | None = None       # first token on device (TTFT)
     t_done: float | None = None
     # prefix-sharing state: tokens [0, shared_tokens) are served by mapped
     # pages; the engine prefills only [shared_tokens, prompt_len).
@@ -77,6 +78,7 @@ class Request:
     stalled: bool = False              # growth denied; inactive one segment
     swap: SwapState | None = None      # host image while preempted
     n_preempted: int = 0               # times this request was swapped out
+    preempted_by: Any = None           # rid of the grower that evicted us
     # host-image block range [b0, b1) the engine scatters on restore (the
     # blocks before b0 were re-matched from the prefix trie)
     restore_blocks: tuple[int, int] = (0, 0)
@@ -98,21 +100,33 @@ class Request:
 
 class ContinuousBatchingScheduler:
     @classmethod
-    def from_plan(cls, plan, *, faults=None
+    def from_plan(cls, plan, *, faults=None, obs=None
                   ) -> "ContinuousBatchingScheduler":
         """Construct from a :class:`~repro.serving.plan.ServingPlan` —
         cache geometry, effective sharing flag, and tenant roster all
         come from the one declarative artifact."""
         return cls(plan.cache, sharing=plan.sharing,
-                   tenants=plan.tenants or None, faults=faults)
+                   tenants=plan.tenants or None, faults=faults,
+                   obs=obs)
 
     def __init__(self, pcfg: PagedCacheConfig, *,
                  sharing: bool | None = None,
                  tenants: Iterable[TenantConfig] | None = None,
-                 faults=None):
+                 faults=None, obs=None):
         self.pcfg = pcfg
         self.rm = ResourceManager(pcfg, tenants, sharing=sharing,
-                                  faults=faults)
+                                  faults=faults, obs=obs)
+        self.obs = self.rm.obs
+        self._rep = self.obs.replica
+        self._c_blocked = self.obs.counter(
+            "serving_admission_blocked_total",
+            "admission attempts held back, by reason",
+            ("replica", "reason"))
+        # gauges only exist when telemetry is on (NULL_METRIC otherwise)
+        self._g_deficit = self.obs.gauge(
+            "serving_tenant_deficit_pages",
+            "DRR credit per tenant at boundary end",
+            ("replica", "tenant"))
         # aliases: the allocator/trie are owned by the resource manager
         self.allocator = self.rm.allocator
         self.sharing = self.rm.sharing
@@ -168,13 +182,15 @@ class ContinuousBatchingScheduler:
                 if victim is None:
                     req.stalled = True    # safe: coverage >= frozen slot
                     break
-                self._preempt(victim)
+                self._preempt(victim, grower=req)
                 preempted.append(victim)
         return preempted
 
-    def _preempt(self, victim: Request) -> None:
+    def _preempt(self, victim: Request,
+                 grower: Request | None = None) -> None:
         self.rm.preempt(victim)           # snapshot + release + requeue
         victim.n_preempted += 1
+        victim.preempted_by = grower.rid if grower is not None else None
         self.vacate(victim)
 
     def vacate(self, req: Request) -> int:
@@ -224,9 +240,12 @@ class ContinuousBatchingScheduler:
                     req = st.head()
                     plan = self.rm.plan_admission(req)
                     if not isinstance(plan, AdmissionPlan):
-                        break             # quota/pool: head holds the line
+                        # quota/pool: head holds the line
+                        self._c_blocked.inc(1.0, (self._rep, plan))
+                        break
                     if plan.cost > st.deficit:
                         deficit_blocked = True
+                        self._c_blocked.inc(1.0, (self._rep, "deficit"))
                         break
                     if not self.rm.commit_admission(plan):
                         break             # optimistic pins freed nothing
@@ -256,6 +275,9 @@ class ContinuousBatchingScheduler:
             req.swap = None               # host image no longer needed
         if self.prefix_cache is not None:
             self.prefix_cache.mark_ready()
+        if self.obs.enabled:
+            for name, st in self.rm._tenants.items():
+                self._g_deficit.set(st.deficit, (self._rep, name))
 
     def end_segment(self, generated_slots: Iterable[int]) -> None:
         """Anti-livelock bookkeeping: a request that generated through a

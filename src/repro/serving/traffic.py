@@ -169,9 +169,12 @@ def replay(model, params, plan, profile: TrafficProfile, *,
             r.slot = None
             r.restore_blocks = (0, 0)
         del engine
-    adm = [r.t_admitted - r.arrival for r in reqs
-           if r.t_admitted is not None]
-    tokens = sum(len(r.tokens) for r in reqs if r.tokens)
+    # stage-1 feature vector reads from the telemetry layer — the
+    # measured per-request records in stats["requests"] and the
+    # registry-backed counters — not from Request fields
+    adm = [rec["queue_wait_s"] for rec in stats["requests"]
+           if rec["queue_wait_s"] is not None]
+    tokens = sum(rec["n_tokens"] for rec in stats["requests"])
     feats = {
         "profile": profile.name,
         "admission_p50_s": float(np.percentile(adm, 50)) if adm else 0.0,

@@ -1,0 +1,397 @@
+"""Serving telemetry layer: MetricsRegistry semantics (typed handles,
+label filtering, snapshot/delta, Prometheus rendering against golden
+files), request-lifecycle tracing (span trees, seeded-chaos determinism),
+the disabled-mode zero-allocation guarantee, and the stats() thin-view
+consolidation (historical counters must read back identical through the
+registry)."""
+
+import gc
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import pytest
+
+from repro.serving import (FaultPlan, MetricsRegistry, NULL_METRIC,
+                           Observability, ObservabilityPolicy,
+                           PagedCacheConfig, PagedServingEngine,
+                           RecoveryPolicy, Request, ServingPlan,
+                           TenantConfig, Tracer, exponential_buckets,
+                           render_summary)
+from repro.serving.observe import Counter, Gauge, Histogram
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
+
+
+# ------------------------------------------------------------- registry
+class TestRegistry:
+    def test_counter_inc_and_label_filtering(self):
+        reg = MetricsRegistry()
+        c = reg.counter("c", "help", ("replica", "tenant"))
+        c.inc(2.0, ("r0", "a"))
+        c.inc(1.0, ("r0", "b"))
+        c.inc(4.0, ("r1", "a"))
+        assert c.value(("r0", "a")) == 2.0
+        assert c.total() == 7.0
+        assert c.total(replica="r0") == 3.0
+        assert c.total(tenant="a") == 6.0
+        assert c.total(replica="r1", tenant="a") == 4.0
+        with pytest.raises(ValueError):
+            c.total(site="x")                  # unknown label name
+        with pytest.raises(ValueError):
+            c.inc(-1.0)                        # counters are monotonic
+
+    def test_handles_idempotent_and_typed(self):
+        reg = MetricsRegistry()
+        a = reg.counter("m", "h", ("x",))
+        assert reg.counter("m", "h", ("x",)) is a
+        with pytest.raises(ValueError):
+            reg.gauge("m", "h", ("x",))        # kind mismatch
+        with pytest.raises(ValueError):
+            reg.counter("m", "h", ("y",))      # label mismatch
+
+    def test_gauge_set_inc_dec(self):
+        g = Gauge("g", labels=("r",))
+        g.set(5, ("r0",))
+        g.inc(2, ("r0",))
+        g.dec(3, ("r0",))
+        assert g.value(("r0",)) == 4.0
+
+    def test_snapshot_delta(self):
+        reg = MetricsRegistry()
+        c = reg.counter("c")
+        h = reg.histogram("h", buckets=(1.0, 2.0))
+        c.inc(3.0)
+        h.observe(0.5)
+        prev = json.loads(json.dumps(reg.snapshot()))  # JSON-safe
+        c.inc(2.0)
+        h.observe(1.5)
+        d = reg.delta(prev)
+        assert d["c"]["series"][0]["value"] == 2.0
+        hs = d["h"]["series"][0]
+        assert hs["count"] == 1 and hs["counts"] == [0, 1, 0]
+        assert hs["sum"] == 1.5
+
+    def test_exponential_buckets_validation(self):
+        b = exponential_buckets(0.001, 2.0, 4)
+        assert b == (0.001, 0.002, 0.004, 0.008)
+        for bad in ((0, 2.0, 4), (0.1, 1.0, 4), (0.1, 2.0, 0)):
+            with pytest.raises(ValueError):
+                exponential_buckets(*bad)
+        with pytest.raises(ValueError):
+            Histogram("h", buckets=(2.0, 1.0))  # not increasing
+        with pytest.raises(ValueError):
+            Histogram("h", buckets=())
+
+
+class TestHistogram:
+    def test_le_semantics_and_percentile(self):
+        h = Histogram("h", buckets=(1.0, 2.0, 4.0))
+        for v in (0.5, 1.0, 1.5, 3.0, 100.0):
+            h.observe(v)
+        counts, total, n = h.series[()]
+        # le semantics: v == bound lands in that bound's bucket
+        assert counts == [2, 1, 1, 1]
+        assert n == 5 and total == 106.0
+        assert h.count(()) == 5
+        # past the top finite bound clamps to it
+        assert h.percentile(100) == 4.0
+        assert 0.0 < h.percentile(50) <= 2.0
+        assert h.percentile(50, labels=()) == h.percentile(50)
+
+    def test_empty_percentile_is_zero(self):
+        h = Histogram("h", buckets=(1.0,))
+        assert h.percentile(95) == 0.0
+
+    def test_bucket_invariants_property(self):
+        """sum(counts) == count, cumulative counts are monotone, the
+        +Inf slot catches everything past the top bound, and sum tracks
+        the observed values exactly."""
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=50, deadline=None)
+        @given(st.lists(st.floats(min_value=0.0, max_value=1e6,
+                                  allow_nan=False, allow_infinity=False),
+                        max_size=100))
+        def prop(values):
+            h = Histogram("h", buckets=exponential_buckets(1e-3, 4.0, 8))
+            for v in values:
+                h.observe(v)
+            if not values:
+                assert h.series == {}
+                return
+            counts, total, n = h.series[()]
+            assert len(counts) == len(h.buckets) + 1
+            assert sum(counts) == n == len(values)
+            cum = np.cumsum(counts)
+            assert all(np.diff(cum) >= 0)
+            assert counts[-1] == sum(1 for v in values
+                                     if v > h.buckets[-1])
+            assert total == pytest.approx(sum(values), rel=1e-9, abs=1e-12)
+        prop()
+
+
+# ------------------------------------------------------------ exporters
+class TestExporters:
+    def _golden_registry(self):
+        reg = MetricsRegistry(histogram_buckets=(0.001, 0.01, 0.1))
+        c = reg.counter("serving_admitted_total", "requests admitted",
+                        ("replica", "tenant"))
+        c.inc(3.0, ("r0", "svc"))
+        c.inc(1.0, ("r0", "batch"))
+        g = reg.gauge("serving_pool_free_pages", "free pages",
+                      ("replica",))
+        g.set(11, ("r0",))
+        h = reg.histogram("serving_ttft_seconds",
+                          "submit to first token", ("replica",))
+        for v in (0.0005, 0.002, 0.02, 0.2):
+            h.observe(v, ("r0",))
+        return reg
+
+    def _golden_tracer(self):
+        t = Tracer()
+        t.event(7, "SUBMIT", 0, 0.0, tenant="svc", prompt_len=32,
+                max_new=16)
+        t.event(7, "ADMIT", 1, 0.25, restore=False, slot=0, pages=3,
+                shared_tokens=0)
+        t.event(7, "SEGMENT", 1, 0.5, tokens=4)
+        t.event(7, "COMPLETE", 2, 0.75, n_tokens=16, preemptions=0,
+                retries=0)
+        return t
+
+    def test_prometheus_golden(self):
+        got = self._golden_registry().to_prometheus()
+        with open(os.path.join(GOLDEN, "metrics.prom")) as f:
+            assert got == f.read()
+
+    def test_jsonl_golden(self, tmp_path):
+        path = self._golden_tracer().to_jsonl(
+            str(tmp_path / "trace.jsonl"))
+        with open(path) as f, \
+                open(os.path.join(GOLDEN, "trace.jsonl")) as g:
+            assert f.read() == g.read()
+
+    def test_render_summary_shape(self):
+        s = render_summary(self._golden_registry())
+        assert s["counters"]["serving_admitted_total"] == 4.0
+        assert s["gauges"]["serving_pool_free_pages"] == 11.0
+        hs = s["histograms"]["serving_ttft_seconds"]
+        assert hs["count"] == 4
+        assert hs["mean"] == pytest.approx(0.2225 / 4)
+        assert 0.0 < hs["p50"] <= hs["p95"] <= 0.1
+
+
+# --------------------------------------------------------------- tracer
+class TestTracer:
+    def test_span_tree_groups_lifecycle(self):
+        t = Tracer()
+        t.event(1, "SUBMIT", 0, 0.0)
+        t.event(1, "ADMIT", 1, 0.1, restore=False)
+        t.event(1, "SEGMENT", 1, 0.2, tokens=4)
+        t.event(1, "PREEMPT", 2, 0.3, by=2)
+        t.event(1, "ADMIT", 3, 0.4, restore=True)
+        t.event(1, "COMPLETE", 4, 0.5)
+        t.event(2, "SUBMIT", 0, 0.0)           # other rid: filtered out
+        spans = t.span_tree(1)
+        assert [s["phase"] for s in spans] == \
+            ["queued", "running", "swapped", "running", "done"]
+        assert spans[1]["events"] == ["ADMIT", "SEGMENT"]
+        assert spans[1]["t_end"] == 0.3        # closed by the PREEMPT
+        assert t.rids() == [1, 2]
+
+    def test_sequence_drops_timestamps_only(self):
+        a, b = Tracer(), Tracer()
+        a.event(1, "SUBMIT", 0, 0.123, tenant="x")
+        b.event(1, "SUBMIT", 0, 9.876, tenant="x")
+        assert a.sequence() == b.sequence()
+        b.event(1, "ADMIT", 1, 0.0)
+        assert a.sequence() != b.sequence()
+
+
+# -------------------------------------------------- facade + plan knobs
+class TestObservability:
+    def test_disabled_handles(self):
+        obs = Observability.disabled()
+        assert not obs.enabled and obs.tracer is None
+        assert obs.histogram("h") is NULL_METRIC
+        assert obs.gauge("g") is NULL_METRIC
+        # counters stay real: they back the stats() thin views
+        c = obs.counter("c", "", ("x",))
+        assert isinstance(c, Counter)
+        # never a singleton: independent stores
+        assert Observability.disabled().registry is not obs.registry
+
+    def test_disabled_probe_allocates_nothing(self):
+        """The disabled hot path: a no-op call against NULL_METRIC must
+        not allocate (one attribute lookup + call, nothing else)."""
+        observe = NULL_METRIC.observe
+        for _ in range(64):
+            observe(1.0, ("r0",))              # warm any caches
+        gc.collect()
+        before = sys.getallocatedblocks()
+        for _ in range(10_000):
+            observe(1.0, ("r0",))
+        grown = sys.getallocatedblocks() - before
+        assert grown <= 2, f"disabled probe allocated {grown} blocks"
+
+    def test_for_replica_shares_store(self):
+        pol = ObservabilityPolicy(enabled=True)
+        obs = Observability.from_policy(pol)
+        r0, r1 = obs.for_replica("r0"), obs.for_replica("r1")
+        assert r0.registry is r1.registry is obs.registry
+        assert r0.tracer is obs.tracer
+        c0 = r0.counter("c", "", ("replica",))
+        c0.inc(1.0, (r0.replica,))
+        r1.counter("c", "", ("replica",)).inc(2.0, (r1.replica,))
+        assert c0.total() == 3.0
+        assert c0.total(replica="r1") == 2.0
+
+    def test_policy_validation_and_plan_round_trip(self, tmp_path):
+        with pytest.raises(ValueError):
+            ObservabilityPolicy(histogram_buckets=(2.0, 1.0))
+        with pytest.raises(ValueError):
+            ObservabilityPolicy(enabled=False, export_dir="/tmp/x")
+        plan = ServingPlan(
+            cache=PagedCacheConfig(page_size=8, n_pages=16, max_slots=2,
+                                   max_blocks=4, segment_len=4),
+            observability=ObservabilityPolicy(
+                enabled=True, histogram_buckets=(0.01, 0.1)))
+        back = ServingPlan.from_dict(
+            json.loads(json.dumps(plan.to_dict())))
+        assert back == plan
+        assert back.observability.histogram_buckets == (0.01, 0.1)
+        # resolve() provenance distinguishes defaulted from explicit
+        from repro.configs.registry import get_config
+        cfg = get_config("qwen2_7b", smoke=True)
+        cold = str(tmp_path / "empty_cache.json")
+        pol = ObservabilityPolicy(enabled=True)
+        p2 = ServingPlan.resolve(cfg, slots=2, max_prompt_len=16,
+                                 max_new_tokens=8, cache_path=cold,
+                                 observability=pol)
+        assert p2.provenance["observability"] == "explicit"
+        assert p2.observability is pol
+        p3 = ServingPlan.resolve(cfg, slots=2, max_prompt_len=16,
+                                 max_new_tokens=8, cache_path=cold)
+        assert p3.provenance["observability"] == "default"
+        assert not p3.observability.enabled
+
+
+# ----------------------------------------------------------- end to end
+_E = {}
+
+
+def _engine_fixture():
+    if not _E:
+        from repro.configs.registry import get_config
+        from repro.models.api import build_model
+        cfg = get_config("qwen2_7b", smoke=True)
+        model = build_model(cfg)
+        pcfg = PagedCacheConfig(page_size=8, n_pages=24, max_slots=4,
+                                max_blocks=6, segment_len=4,
+                                retain_pages=4)
+        eng = PagedServingEngine(
+            model, pcfg, tenants=[TenantConfig("a"), TenantConfig("b")])
+        _E["x"] = (cfg, model.init(jax.random.PRNGKey(0)), eng)
+    return _E["x"]
+
+
+def _mk_reqs(cfg, n=6, gen=12):
+    from repro.data.synthetic import lm_tokens
+    return [Request(rid=i, prompt=np.asarray(
+                lm_tokens(16, cfg.vocab_size, seed=70 + i)
+            ).astype(np.int32), max_new_tokens=gen,
+            tenant="a" if i % 2 else "b") for i in range(n)]
+
+
+def _chaos_run(cfg, params, eng, out_dir=""):
+    obs = Observability.from_policy(ObservabilityPolicy(enabled=True))
+    reqs = _mk_reqs(cfg)
+    stats = eng.run(reqs, params,
+                    faults=FaultPlan.at(alloc=1, decode_poison=1),
+                    recovery=RecoveryPolicy(check_invariants=True),
+                    obs=obs)
+    if out_dir:
+        stats["exports"] = obs.export(out_dir)
+    return obs, reqs, stats
+
+
+def test_run_emits_request_records_and_metrics():
+    cfg, params, eng = _engine_fixture()
+    obs = Observability.from_policy(ObservabilityPolicy(enabled=True))
+    reqs = _mk_reqs(cfg)
+    stats = eng.run(reqs, params, obs=obs)
+    recs = {r["rid"]: r for r in stats["requests"]}
+    assert set(recs) == {r.rid for r in reqs}
+    for req in reqs:
+        rec = recs[req.rid]
+        assert not rec["dead"]
+        assert rec["e2e_s"] == pytest.approx(req.t_done - req.arrival)
+        assert 0.0 <= rec["ttft_s"] <= rec["e2e_s"]
+        assert rec["n_tokens"] == len(req.tokens)
+    m = stats["metrics"]
+    assert m["counters"]["serving_admitted_total"] == len(reqs)
+    assert m["histograms"]["serving_e2e_latency_seconds"]["count"] \
+        == len(reqs)
+    # the tracer saw the full lifecycle of every request
+    for req in reqs:
+        kinds = [e.kind for e in obs.tracer.trace(req.rid)]
+        assert kinds[0] == "SUBMIT" and kinds[-1] == "COMPLETE"
+        assert "ADMIT" in kinds and "SEGMENT" in kinds
+
+
+def test_stats_views_match_registry():
+    """The consolidation invariant: the historical stats() dict keys are
+    thin views over registry counters — one storage, two reads."""
+    cfg, params, eng = _engine_fixture()
+    obs, reqs, stats = _chaos_run(cfg, params, eng)
+    by_name = {m.name: m for m in obs.registry.metrics()}
+    rm_keys = {
+        "preemptions": "serving_preemptions_total",
+        "restores": "serving_restores_total",
+        "pages_swapped_out": "serving_pages_swapped_out_total",
+        "pages_swapped_in": "serving_pages_swapped_in_total",
+        "dead_letters": "serving_dead_letters_total",
+    }
+    for key, metric in rm_keys.items():
+        assert stats[key] == int(by_name[metric].total()), key
+    rec = stats["recovery"]
+    assert rec["quarantines"] == \
+        int(by_name["serving_quarantines_total"].total())
+    assert stats["faults"] is not None
+    fired = by_name["serving_fault_fires_total"]
+    for site, _ in stats["faults"]["fired"]:
+        assert fired.total(site=site) >= 1
+
+
+def test_seeded_chaos_trace_is_deterministic():
+    """Two identical seeded chaos runs produce bit-equal trace
+    sequences (timestamps excluded) and bit-equal tokens."""
+    cfg, params, eng = _engine_fixture()
+    obs_a, reqs_a, _ = _chaos_run(cfg, params, eng)
+    obs_b, reqs_b, _ = _chaos_run(cfg, params, eng)
+    assert obs_a.tracer.sequence() == obs_b.tracer.sequence()
+    assert {r.rid: list(r.tokens) for r in reqs_a} \
+        == {r.rid: list(r.tokens) for r in reqs_b}
+    # the decode_poison fire is attributable: a QUARANTINE span event
+    # names the site and a real rid
+    quar = [e for e in obs_a.tracer.events if e.kind == "QUARANTINE"
+            and e.detail.get("site") == "decode_poison"]
+    assert quar and all(e.rid is not None for e in quar)
+
+
+def test_export_files_and_plan_export_dir(tmp_path):
+    cfg, params, eng = _engine_fixture()
+    _, _, stats = _chaos_run(cfg, params, eng, out_dir=str(tmp_path))
+    paths = stats["exports"]
+    with open(paths["metrics"]) as f:
+        prom = f.read()
+    assert "# TYPE serving_admitted_total counter" in prom
+    assert "serving_ttft_seconds_bucket" in prom
+    with open(paths["trace"]) as f:
+        events = [json.loads(line) for line in f]
+    assert events and {"rid", "kind", "boundary", "t", "detail"} \
+        <= set(events[0])
+    assert any(e["kind"] == "FAULT" for e in events)
